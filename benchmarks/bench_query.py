@@ -1,0 +1,50 @@
+"""Paper §5 query claim ("real time at 1M") + the §3.1 recall/ef tradeoff.
+
+Measures batched HNSW search latency + recall@10 vs efSearch, and the exact
+flat-index scan latency (the brute-force bound), at CPU-feasible scale.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import hnsw, hnsw_build
+from repro.core.flat import FlatIndex
+from repro.data.synthetic import make_corpus
+from repro.kernels import ref
+import jax.numpy as jnp
+
+
+def run(rows: list):
+    n, dim, q_n = 20_000, 64, 64
+    data = make_corpus(n, dim, seed=0)
+    rng = np.random.default_rng(1)
+    # realistic retrieval: queries near the corpus manifold (perturbed rows)
+    queries = (data[rng.integers(0, n, q_n)]
+               + 0.15 * rng.normal(size=(q_n, dim)).astype(np.float32))
+    g = hnsw_build.build_sequential(data, M=8, ef_construction=60)
+    dg = hnsw.to_device_graph(g)
+    qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+    _, true_i = ref.distance_topk_ref(jnp.asarray(g.vectors),
+                                      jnp.asarray(qn), 10)
+
+    for ef in (16, 32, 64, 128):
+        ids, _ = hnsw.search_graph(dg, queries, k=10, ef=ef)   # compile
+        jax.block_until_ready(ids)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            ids, _ = hnsw.search_graph(dg, queries, k=10, ef=ef)
+            jax.block_until_ready(ids)
+        us = (time.perf_counter() - t0) / 3 / q_n * 1e6
+        rec = hnsw.recall_at_k(np.asarray(ids), np.asarray(true_i))
+        rows.append((f"hnsw_query_n{n}_ef{ef}", us, f"recall@10={rec:.3f}"))
+
+    flat = FlatIndex.build(data)
+    d, i = flat.query(queries, k=10)
+    jax.block_until_ready(i)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        d, i = flat.query(queries, k=10)
+        jax.block_until_ready(i)
+    us = (time.perf_counter() - t0) / 3 / q_n * 1e6
+    rows.append((f"flat_query_n{n}", us, "exact"))

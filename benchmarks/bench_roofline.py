@@ -1,0 +1,29 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py output).
+
+Reads dryrun_pod_baseline.json / dryrun_tuned_both.json if present; cells
+can be (re)generated with:
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --preset tuned \
+        --out dryrun_tuned_both.json
+"""
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run(rows: list):
+    for name in ("dryrun_pod_baseline.json", "dryrun_tuned_both.json"):
+        path = os.path.join(ROOT, name)
+        if not os.path.exists(path):
+            rows.append((f"roofline_{name}", 0, "missing: run launch.dryrun"))
+            continue
+        cells = json.load(open(path))
+        ok = [c for c in cells if c.get("status") == "ok"]
+        tag = "baseline" if "baseline" in name else "tuned"
+        for c in ok:
+            step = max(c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+            rows.append((
+                f"roofline_{tag}_{c['arch']}_{c['shape']}_{c['mesh']}",
+                step * 1e6,
+                f"bottleneck={c['bottleneck']},frac={c['roofline_fraction']:.2f},"
+                f"useful={c['useful_ratio']:.2f},fits={c['fits_hbm']}"))

@@ -1,0 +1,28 @@
+"""Continuous-batching serving throughput (smoke LM, CPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tf
+from repro.serve.engine import ServeEngine
+
+
+def run(rows: list):
+    cfg = get_smoke_config("llama3-8b")
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    for slots in (1, 4):
+        eng = ServeEngine(params, cfg, slots=slots, max_len=96,
+                          dtype=jnp.float32)
+        prompts = [np.arange(6 + i) % cfg.vocab for i in range(8)]
+        eng.generate(prompts[:1], max_new_tokens=2)        # warm compile
+        t0 = time.perf_counter()
+        eng2 = ServeEngine(params, cfg, slots=slots, max_len=96,
+                           dtype=jnp.float32)
+        eng2.generate(prompts, max_new_tokens=12)
+        dt = time.perf_counter() - t0
+        tput = eng2.tokens_out / dt
+        rows.append((f"serve_slots{slots}_8req", dt * 1e6,
+                     f"tok_per_s={tput:.1f}"))

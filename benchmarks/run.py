@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure + the roofline
+table from the dry-run. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only build,query,...]
+"""
+import argparse
+import sys
+import time
+
+SUITES = ["build", "query", "tiered", "rag", "serve", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    rows: list = []
+    print("name,us_per_call,derived")
+    for suite in SUITES:
+        if suite not in only:
+            continue
+        mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+        t0 = time.perf_counter()
+        n_before = len(rows)
+        try:
+            mod.run(rows)
+        except Exception as e:  # keep the harness going; report the failure
+            rows.append((f"{suite}_FAILED", 0, f"{type(e).__name__}:{e}"))
+        for name, us, derived in rows[n_before:]:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+        print(f"# suite {suite} done in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

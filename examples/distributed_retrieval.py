@@ -1,0 +1,44 @@
+"""Distributed retrieval demo: the corpus sharded over a (pod, data, model)
+mesh, per-shard top-k + hierarchical merge — the pod-scale version of the
+paper's on-device search. Uses 8 fake host devices.
+
+    PYTHONPATH=src python examples/distributed_retrieval.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax                                    # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+import numpy as np                            # noqa: E402
+
+from repro.core.distributed import sharded_flat_topk   # noqa: E402
+from repro.data.synthetic import make_corpus            # noqa: E402
+from repro.kernels import ref                           # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    n, dim, b, k = 64_000, 64, 8, 10
+    db = jnp.asarray(make_corpus(n, dim, seed=0))
+    db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
+    q = db[:b] + 0.01
+
+    fn = jax.jit(lambda db, q: sharded_flat_topk(mesh, db, q, k))
+    d, i = fn(db, q)
+    d_exp, i_exp = ref.distance_topk_ref(db, q, k)
+    match = (np.sort(np.asarray(i)) == np.sort(np.asarray(i_exp))).mean()
+    print(f"mesh {dict(mesh.shape)}  db {n}x{dim} sharded over "
+          f"{np.prod(list(mesh.shape.values()))} devices")
+    print(f"top-{k} ids match exact search: {match:.1%}")
+    print("first query ->", np.asarray(i[0])[:5], np.round(np.asarray(d[0])[:5], 4))
+
+    lowered = jax.jit(lambda db, q: sharded_flat_topk(mesh, db, q, k)).lower(db, q)
+    txt = lowered.compile().as_text()
+    n_ag = txt.count("all-gather")
+    print(f"compiled collective ops: {n_ag} all-gathers "
+          f"(log-depth hierarchical merge over 3 axes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the MeMemo API (paper §2.1, Code 1 parity).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.interface import HNSW
+from repro.core.tiered import auto_prefetch_p, simulate_search_traffic
+from repro.data.synthetic import make_corpus
+
+
+def main():
+    # --- Code 1: create an index, bulk-insert, query ------------------------
+    n, dim = 2000, 64
+    values = make_corpus(n, dim, seed=0)
+    keys = [f"doc-{i}" for i in range(n)]
+
+    index = HNSW(distance_function="cosine", M=16, ef_construction=100)
+    index.bulk_insert(keys, values)                      # await index.bulkInsert(...)
+
+    query = values[123] + 0.05 * np.random.default_rng(1).normal(size=dim)
+    found_keys, distances = index.query(query, k=5)      # await index.query(...)
+    print("query ->", list(zip(found_keys, np.round(distances, 4))))
+    assert found_keys[0] == "doc-123"
+
+    # --- exact oracle comparison (recall) -----------------------------------
+    exact_ids, _ = index.exact_query(query, k=5)
+    print("exact ids:", exact_ids[:5])
+
+    # --- export / load (persistent index, §2.1) -----------------------------
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "index.npz")
+        index.export_index(path)
+        loaded = HNSW.load_index(path)
+        k2, _ = loaded.query(query, k=5)
+        assert k2 == found_keys
+        print(f"export/load roundtrip OK ({os.path.getsize(path)/1e6:.1f} MB)")
+
+    # --- the two-tier memory story (§3.2) ------------------------------------
+    g = index._graph or index._builder.graph()
+    queries = make_corpus(50, dim, seed=2)
+    p = auto_prefetch_p(dim)
+    with_pref = simulate_search_traffic(g, queries, ef=32, cache_rows=256,
+                                        prefetch_p=16)
+    without = simulate_search_traffic(g, queries, ef=32, cache_rows=256,
+                                      prefetch_p=1, use_graph_prefetch=False)
+    print(f"auto prefetch p for dim={dim}: {p}")
+    print(f"slow-tier transactions  with prefetch: {with_pref.transactions}  "
+          f"without: {without.transactions}  "
+          f"({without.transactions / max(with_pref.transactions, 1):.2f}x saved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Exact flat index: brute-force top-k (the recall oracle + retrieval_cand).
+
+Routes through kernels/ops.flat_topk (Pallas distance+top-k on TPU, jnp
+reference on CPU). This is also the "real time at 1M" claim's workload
+(paper section 5): one query against the full database.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hnsw_build import normalize_rows
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class FlatIndex:
+    vectors: jax.Array          # [N, D] (normalised if cosine)
+    metric: str = "cosine"
+
+    @classmethod
+    def build(cls, vectors, metric: str = "cosine") -> "FlatIndex":
+        v = np.asarray(vectors, np.float32)
+        if metric == "cosine":
+            v = normalize_rows(v)
+        return cls(vectors=jnp.asarray(v), metric=metric)
+
+    def query(self, queries, k: int = 10):
+        q = jnp.asarray(queries, jnp.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None]
+        if self.metric == "cosine":
+            q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        d, i = ops.flat_topk(self.vectors, q, k, metric=self.metric)
+        if squeeze:
+            return d[0], i[0]
+        return d, i
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]

@@ -1,0 +1,213 @@
+"""Batch-synchronous HNSW search in JAX (fixed shapes, lock-step).
+
+The browser algorithm is pointer-chasing best-first search; on TPU every
+query in the batch advances together (DESIGN.md §2):
+
+  * upper layers: greedy descent, one hop per ``while_loop`` iteration, all
+    queries stepping simultaneously until none improves;
+  * layer 0: ef-beam best-first search. The beam is a sorted array of
+    (dist, id, expanded); each iteration expands the best unexpanded entry of
+    every query, gathers its 2M neighbors (the ``gather_distance`` hot spot —
+    Pallas kernel on TPU, fused gather+dot here), merges candidates with a
+    two-key sort and adjacent-duplicate masking.
+
+Work per query  = ef expansions x 2M neighbor distances — identical to the
+sequential algorithm's expansion budget, so recall matches the reference
+builder (validated in tests/test_hnsw.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hnsw_build import HNSWGraph
+from repro.distributed.sharding import shard
+
+INF = jnp.float32(3.0e38)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """HNSW graph as dense device tensors."""
+    vectors: jax.Array      # [N, D] f32 (normalised if cosine)
+    neighbors0: jax.Array   # [N, 2M] int32 (-1 pad)
+    upper: jax.Array        # [L, N, M] int32 (-1 pad); L may be 0
+    levels: jax.Array       # [N] int32
+    entry: jax.Array        # scalar int32
+    max_level: int          # static
+    metric: str             # static
+
+    def tree_flatten(self):
+        return ((self.vectors, self.neighbors0, self.upper, self.levels,
+                 self.entry), (self.max_level, self.metric))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, max_level=aux[0], metric=aux[1])
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+
+def to_device_graph(g: HNSWGraph) -> DeviceGraph:
+    return DeviceGraph(
+        vectors=jnp.asarray(g.vectors, jnp.float32),
+        neighbors0=jnp.asarray(g.neighbors0, jnp.int32),
+        upper=jnp.asarray(g.upper, jnp.int32),
+        levels=jnp.asarray(g.levels, jnp.int32),
+        entry=jnp.asarray(max(g.entry, 0), jnp.int32),
+        max_level=int(g.max_level),
+        metric=g.metric,
+    )
+
+
+# ---------------------------------------------------------------------------
+# distances
+# ---------------------------------------------------------------------------
+def batched_dist(metric: str, q: jax.Array, x: jax.Array) -> jax.Array:
+    """q [B, D], x [B, K, D] -> [B, K] (f32 accumulate)."""
+    if metric in ("cosine", "ip"):
+        return 1.0 - jnp.einsum("bd,bkd->bk", q, x,
+                                preferred_element_type=jnp.float32)
+    d = x - q[:, None, :]
+    return jnp.einsum("bkd,bkd->bk", d, d, preferred_element_type=jnp.float32)
+
+
+def gather_distance(metric: str, vectors: jax.Array, q: jax.Array,
+                    ids: jax.Array) -> jax.Array:
+    """Fused gather(HBM)->distance: ids [B, K] (clamped), q [B, D] -> [B, K].
+
+    On TPU this routes to kernels/gather_distance.py; the jnp fallback keeps
+    identical semantics (invalid ids must be masked by the caller).
+    """
+    from repro.kernels import ops
+    return ops.gather_distance(vectors, q, ids, metric=metric)
+
+
+def _prep_queries(g: DeviceGraph, queries) -> jax.Array:
+    q = jnp.asarray(queries, jnp.float32)
+    if q.ndim == 1:
+        q = q[None]
+    if g.metric == "cosine":
+        q = q / jnp.maximum(
+            jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# upper-layer greedy descent (all queries lock-step)
+# ---------------------------------------------------------------------------
+def _greedy_layer(g: DeviceGraph, q: jax.Array, ep: jax.Array,
+                  ep_dist: jax.Array, layer: int) -> tuple[jax.Array, jax.Array]:
+    """One layer's greedy descent. ep/ep_dist [B]. Static layer index."""
+    nbr_table = g.upper[layer - 1]          # [N, M]
+
+    def cond(state):
+        _, _, improved = state
+        return jnp.any(improved)
+
+    def body(state):
+        ep, ep_dist, _ = state
+        nbrs = jnp.take(nbr_table, ep, axis=0)                 # [B, M]
+        valid = nbrs >= 0
+        ids = jnp.clip(nbrs, 0, g.n - 1)
+        d = gather_distance(g.metric, g.vectors, q, ids)
+        d = jnp.where(valid, d, INF)
+        j = jnp.argmin(d, axis=-1)
+        best_d = jnp.take_along_axis(d, j[:, None], 1)[:, 0]
+        best_i = jnp.take_along_axis(ids, j[:, None], 1)[:, 0]
+        improved = best_d < ep_dist
+        return (jnp.where(improved, best_i, ep),
+                jnp.where(improved, best_d, ep_dist),
+                improved)
+
+    init = (ep, ep_dist, jnp.ones_like(ep, bool))
+    ep, ep_dist, _ = jax.lax.while_loop(cond, body, init)
+    return ep, ep_dist
+
+
+# ---------------------------------------------------------------------------
+# layer-0 beam search
+# ---------------------------------------------------------------------------
+def _beam_search(g: DeviceGraph, q: jax.Array, ep: jax.Array,
+                 ep_dist: jax.Array, ef: int, max_iters: int | None = None):
+    """ef-beam best-first search on layer 0. Returns sorted (ids, dists)."""
+    b = q.shape[0]
+    m2 = g.neighbors0.shape[1]
+    max_iters = max_iters or ef
+
+    beam_d = jnp.full((b, ef), INF).at[:, 0].set(ep_dist)
+    beam_i = jnp.full((b, ef), -1, jnp.int32).at[:, 0].set(ep)
+    beam_x = jnp.zeros((b, ef), bool)                    # expanded?
+
+    def cond(state):
+        beam_d, beam_i, beam_x, it = state
+        frontier = (~beam_x) & (beam_i >= 0)
+        return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    def body(state):
+        beam_d, beam_i, beam_x, it = state
+        # best unexpanded candidate per query
+        cand_d = jnp.where(beam_x | (beam_i < 0), INF, beam_d)
+        j = jnp.argmin(cand_d, axis=-1)                      # [B]
+        has = jnp.take_along_axis(cand_d, j[:, None], 1)[:, 0] < INF
+        cur = jnp.take_along_axis(beam_i, j[:, None], 1)[:, 0]
+        beam_x = beam_x.at[jnp.arange(b), j].set(beam_x[jnp.arange(b), j] | has)
+        # expand: gather 2M neighbors + distances
+        nbrs = jnp.take(g.neighbors0, jnp.clip(cur, 0, g.n - 1), axis=0)
+        valid = (nbrs >= 0) & has[:, None]
+        ids = jnp.clip(nbrs, 0, g.n - 1)
+        d = gather_distance(g.metric, g.vectors, q, ids)
+        d = jnp.where(valid, d, INF)
+        # merge into beam: two-key sort then adjacent-dup masking
+        all_d = jnp.concatenate([beam_d, d], axis=1)         # [B, ef+2M]
+        all_i = jnp.concatenate([beam_i, ids], axis=1)
+        all_x = jnp.concatenate(
+            [beam_x, jnp.zeros((b, m2), bool)], axis=1)
+        all_i = jnp.where(all_d >= INF, -1, all_i)
+        sd, si, sx = jax.lax.sort((all_d, all_i, all_x), num_keys=2)
+        dup = jnp.concatenate(
+            [jnp.zeros((b, 1), bool), (si[:, 1:] == si[:, :-1]) & (si[:, 1:] >= 0)],
+            axis=1)
+        sd = jnp.where(dup, INF, sd)
+        sx = jnp.where(dup, True, sx)
+        sd, si, sx = jax.lax.sort((sd, si, sx), num_keys=2)
+        return (sd[:, :ef], si[:, :ef], sx[:, :ef], it + 1)
+
+    beam_d, beam_i, beam_x, _ = jax.lax.while_loop(
+        cond, body, (beam_d, beam_i, beam_x, jnp.zeros((), jnp.int32)))
+    return beam_i, beam_d
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iters"))
+def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
+                max_iters: int | None):
+    ep = jnp.broadcast_to(g.entry, q.shape[:1])
+    ep_dist = batched_dist(g.metric, q, jnp.take(g.vectors, ep, axis=0)[:, None])[:, 0]
+    for layer in range(g.max_level, 0, -1):      # static unroll (few layers)
+        ep, ep_dist = _greedy_layer(g, q, ep, ep_dist, layer)
+    beam_i, beam_d = _beam_search(g, q, ep, ep_dist, ef, max_iters)
+    return beam_i[:, :k], beam_d[:, :k]
+
+
+def search_graph(g: DeviceGraph, queries, k: int = 10, ef: int = 64,
+                 max_iters: int | None = None):
+    """Batched k-NN query. queries [B, D] (or [D]) -> (ids [B,k], dist [B,k])."""
+    q = _prep_queries(g, queries)
+    ef = max(ef, k)
+    return _search_jit(g, q, k, ef, max_iters)
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean fraction of true k-NN recovered."""
+    hits = 0
+    for f, t in zip(np.asarray(found_ids), np.asarray(true_ids)):
+        hits += len(set(int(x) for x in f) & set(int(x) for x in t))
+    return hits / max(true_ids.size, 1)

@@ -1,0 +1,370 @@
+"""HNSW construction.
+
+Two builders, both emitting the same dense-tensor ``HNSWGraph``:
+
+* ``SequentialBuilder`` — faithful Malkov & Yashunin (Alg. 1-4, incl. the
+  neighbor-selection heuristic) in numpy. This is the recall REFERENCE and
+  the apples-to-apples counterpart of the paper's in-browser construction
+  (§5: 1M x 384-d, M=5, efConstruction=20 ≈ 94 min in Chrome).
+
+* ``bulk_build`` — the TPU adaptation of the paper's batched-write insight
+  (§3.2/C3): assign all levels up front, bootstrap a sequential prefix, then
+  insert the remainder in large batches whose candidate searches run as ONE
+  lock-step batched JAX beam search per batch. Orders of magnitude faster;
+  recall parity is validated in tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Graph container (numpy; converted to jnp by repro.core.hnsw)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class HNSWGraph:
+    vectors: np.ndarray          # [N, D] (normalised if cosine)
+    neighbors0: np.ndarray       # [N, 2M] int32, -1 padded (layer 0)
+    upper: np.ndarray            # [L_max, N, M] int32, -1 padded (layers 1..)
+    levels: np.ndarray           # [N] int32
+    entry: int
+    max_level: int
+    metric: str = "cosine"
+    n: int = 0                   # number of live rows (<= capacity)
+
+    @property
+    def M(self) -> int:
+        return self.upper.shape[2] if self.upper.shape[0] else self.neighbors0.shape[1] // 2
+
+    def memory_bytes(self) -> dict:
+        return {
+            "vectors (slow tier)": self.vectors.nbytes,
+            "graph (fast tier)": self.neighbors0.nbytes + self.upper.nbytes
+                                  + self.levels.nbytes,
+        }
+
+
+def normalize_rows(x: np.ndarray) -> np.ndarray:
+    n = np.linalg.norm(x, axis=-1, keepdims=True)
+    return x / np.maximum(n, 1e-12)
+
+
+def _prep(vectors: np.ndarray, metric: str) -> np.ndarray:
+    v = np.ascontiguousarray(vectors, dtype=np.float32)
+    if metric == "cosine":
+        v = normalize_rows(v)
+    return v
+
+
+def _dist(metric: str, q: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """q [D], x [K, D] -> [K]. cosine assumes pre-normalised rows."""
+    if metric in ("cosine", "ip"):
+        return 1.0 - x @ q
+    d = x - q[None, :]
+    return np.einsum("kd,kd->k", d, d)
+
+
+# ---------------------------------------------------------------------------
+# Faithful sequential builder (Malkov & Yashunin)
+# ---------------------------------------------------------------------------
+class SequentialBuilder:
+    def __init__(self, dim: int, *, M: int = 16, ef_construction: int = 200,
+                 metric: str = "cosine", capacity: int = 1024,
+                 max_level_cap: int = 12, seed: int = 0):
+        self.dim = dim
+        self.M = M
+        self.m_max0 = 2 * M
+        self.efc = ef_construction
+        self.metric = metric
+        self.mL = 1.0 / np.log(M) if M > 1 else 1.0
+        self.max_level_cap = max_level_cap
+        self.rng = np.random.default_rng(seed)
+        self.n = 0
+        self.entry = -1
+        self.max_level = -1
+        cap = max(capacity, 8)
+        self.vectors = np.zeros((cap, dim), np.float32)
+        self.levels = np.zeros(cap, np.int32)
+        self.neighbors0 = np.full((cap, self.m_max0), -1, np.int32)
+        self.upper = np.full((max_level_cap, cap, M), -1, np.int32)
+
+    # -- storage helpers ----------------------------------------------------
+    def _grow(self, need: int):
+        cap = self.vectors.shape[0]
+        if need <= cap:
+            return
+        new = max(need, cap * 2)
+        self.vectors = np.concatenate(
+            [self.vectors, np.zeros((new - cap, self.dim), np.float32)])
+        self.levels = np.concatenate([self.levels, np.zeros(new - cap, np.int32)])
+        self.neighbors0 = np.concatenate(
+            [self.neighbors0, np.full((new - cap, self.m_max0), -1, np.int32)])
+        self.upper = np.concatenate(
+            [self.upper, np.full((self.max_level_cap, new - cap, self.M), -1,
+                                 np.int32)], axis=1)
+
+    def _nbrs(self, node: int, layer: int) -> np.ndarray:
+        row = self.neighbors0[node] if layer == 0 else self.upper[layer - 1, node]
+        return row[row >= 0]
+
+    def _set_nbrs(self, node: int, layer: int, ids: np.ndarray):
+        cap = self.m_max0 if layer == 0 else self.M
+        row = np.full(cap, -1, np.int32)
+        row[: len(ids)] = ids[:cap]
+        if layer == 0:
+            self.neighbors0[node] = row
+        else:
+            self.upper[layer - 1, node] = row
+
+    # -- Alg. 2: greedy ef-search on one layer -------------------------------
+    def _search_layer(self, q: np.ndarray, eps: list[int], ef: int,
+                      layer: int) -> list[tuple[float, int]]:
+        visited = set(eps)
+        d0 = _dist(self.metric, q, self.vectors[eps])
+        cand = [(d, e) for d, e in zip(d0, eps)]          # min-heap
+        heapq.heapify(cand)
+        res = [(-d, e) for d, e in zip(d0, eps)]          # max-heap (neg)
+        heapq.heapify(res)
+        while cand:
+            d_c, c = heapq.heappop(cand)
+            if d_c > -res[0][0] and len(res) >= ef:
+                break
+            nbrs = [x for x in self._nbrs(c, layer) if x not in visited]
+            if not len(nbrs):
+                continue
+            visited.update(int(x) for x in nbrs)
+            dists = _dist(self.metric, q, self.vectors[nbrs])
+            for d, e in zip(dists, nbrs):
+                if len(res) < ef or d < -res[0][0]:
+                    heapq.heappush(cand, (d, int(e)))
+                    heapq.heappush(res, (-d, int(e)))
+                    if len(res) > ef:
+                        heapq.heappop(res)
+        out = sorted([(-nd, e) for nd, e in res])
+        return out[:ef]
+
+    # -- Alg. 4: neighbor-selection heuristic --------------------------------
+    def _select_heuristic(self, q: np.ndarray, cand: list[tuple[float, int]],
+                          m: int) -> np.ndarray:
+        cand = sorted(cand)
+        selected: list[tuple[float, int]] = []
+        for d_q, e in cand:
+            if len(selected) >= m:
+                break
+            ev = self.vectors[e]
+            ok = True
+            for _, s in selected:
+                if _dist(self.metric, ev, self.vectors[s][None])[0] < d_q:
+                    ok = False
+                    break
+            if ok:
+                selected.append((d_q, e))
+        # backfill with pruned candidates (keepPrunedConnections=True)
+        if len(selected) < m:
+            chosen = {e for _, e in selected}
+            for d_q, e in cand:
+                if len(selected) >= m:
+                    break
+                if e not in chosen:
+                    selected.append((d_q, e))
+        return np.array([e for _, e in selected], np.int32)
+
+    # -- Alg. 1: insert -------------------------------------------------------
+    def insert(self, vec: np.ndarray, level: int | None = None) -> int:
+        self._grow(self.n + 1)
+        q = np.asarray(vec, np.float32)
+        if self.metric == "cosine":
+            q = q / max(float(np.linalg.norm(q)), 1e-12)
+        node = self.n
+        self.vectors[node] = q
+        if level is None:
+            level = int(-np.log(self.rng.uniform(1e-12, 1.0)) * self.mL)
+        lvl = min(level, self.max_level_cap)
+        self.levels[node] = lvl
+        self.n += 1
+
+        if self.entry < 0:
+            self.entry, self.max_level = node, lvl
+            return node
+
+        ep = [self.entry]
+        for lc in range(self.max_level, lvl, -1):
+            ep = [self._search_layer(q, ep, 1, lc)[0][1]]
+        for lc in range(min(lvl, self.max_level), -1, -1):
+            w = self._search_layer(q, ep, self.efc, lc)
+            m = self.m_max0 if lc == 0 else self.M
+            nbrs = self._select_heuristic(q, w, self.M)
+            self._set_nbrs(node, lc, nbrs)
+            for e in nbrs:
+                cur = self._nbrs(int(e), lc)
+                if node not in cur:
+                    cur = np.append(cur, node).astype(np.int32)
+                if len(cur) > m:       # shrink with the same heuristic
+                    ev = self.vectors[int(e)]
+                    cand = list(zip(_dist(self.metric, ev, self.vectors[cur]),
+                                    [int(c) for c in cur]))
+                    cur = self._select_heuristic(ev, cand, m)
+                self._set_nbrs(int(e), lc, cur)
+            ep = [e for _, e in w]
+        if lvl > self.max_level:
+            self.entry, self.max_level = node, lvl
+        return node
+
+    def add_batch(self, vecs: np.ndarray):
+        for v in vecs:
+            self.insert(v)
+
+    def graph(self) -> HNSWGraph:
+        n = self.n
+        lmax = max(int(self.levels[:n].max(initial=0)), 0)
+        return HNSWGraph(
+            vectors=self.vectors[:n],
+            neighbors0=self.neighbors0[:n],
+            upper=self.upper[:lmax, :n].copy(),
+            levels=self.levels[:n],
+            entry=self.entry,
+            max_level=self.max_level,
+            metric=self.metric,
+            n=n,
+        )
+
+    def graph_full_capacity(self, lmax: int) -> HNSWGraph:
+        """Fixed-shape view over the whole capacity (not-yet-inserted rows are
+        unreachable); keeps batched-search shapes constant across bulk
+        batches so the search jit-compiles exactly once."""
+        return HNSWGraph(
+            vectors=self.vectors,
+            neighbors0=self.neighbors0,
+            upper=self.upper[:lmax],
+            levels=self.levels,
+            entry=self.entry,
+            max_level=self.max_level,
+            metric=self.metric,
+            n=self.n,
+        )
+
+
+def build_sequential(vectors: np.ndarray, *, M: int = 16,
+                     ef_construction: int = 200, metric: str = "cosine",
+                     seed: int = 0) -> HNSWGraph:
+    v = _prep(vectors, metric)
+    b = SequentialBuilder(v.shape[1], M=M, ef_construction=ef_construction,
+                          metric=metric, capacity=len(v), seed=seed)
+    b.add_batch(v)
+    return b.graph()
+
+
+# ---------------------------------------------------------------------------
+# Bulk builder (TPU adaptation of C3): batched lock-step inserts
+# ---------------------------------------------------------------------------
+def bulk_build(vectors: np.ndarray, *, M: int = 16, ef_construction: int = 200,
+               metric: str = "cosine", seed: int = 0,
+               bootstrap: int = 256, batch_size: int = 1024) -> HNSWGraph:
+    """Assign levels up-front; bootstrap sequentially; then batch-insert.
+
+    Each batch: ONE batched JAX beam search against the prefix graph finds
+    every member's efConstruction candidates simultaneously (the lock-step
+    regime of DESIGN.md §2), then edges are connected host-side with mutual-M
+    pruning by distance.
+    """
+    from repro.core import hnsw as jhnsw   # lazy: keeps numpy path import-light
+
+    v = _prep(vectors, metric)
+    n, d = v.shape
+    rng = np.random.default_rng(seed)
+    mL = 1.0 / np.log(M) if M > 1 else 1.0
+    levels = np.minimum((-np.log(rng.uniform(1e-12, 1.0, n)) * mL).astype(np.int32),
+                        12)
+    # bootstrap prefix: highest-level points first so the hierarchy exists
+    order = np.argsort(-levels, kind="stable")
+    v_ord = v[order]
+    lv_ord = levels[order]
+
+    nb = min(bootstrap, n)
+    b = SequentialBuilder(d, M=M, ef_construction=ef_construction,
+                          metric=metric, capacity=n, seed=seed)
+    for i in range(nb):
+        b.insert(v_ord[i], level=int(lv_ord[i]))
+
+    m_max0 = 2 * M
+    lmax_cap = max(int(lv_ord.max(initial=0)), 1)
+    k_cand = min(ef_construction, nb)
+    ef_b = max(ef_construction, M + 1)
+    while b.n < n:
+        lo = b.n
+        hi = min(lo + batch_size, n)
+        batch = v_ord[lo:hi]
+        if hi - lo < batch_size:            # pad the tail batch (fixed shapes)
+            batch = np.concatenate(
+                [batch, np.zeros((batch_size - (hi - lo), d), np.float32)])
+        b._grow(n)
+        g = b.graph_full_capacity(lmax_cap)
+        # one batched beam search over the prefix for all batch members
+        cand_ids, cand_dist = jhnsw.search_graph(
+            jhnsw.to_device_graph(g), batch, k=k_cand, ef=ef_b)
+        cand_ids = np.asarray(cand_ids)
+        cand_dist = np.asarray(cand_dist)
+        for j in range(hi - lo):
+            node = b.n
+            lvl = int(lv_ord[node])
+            b.vectors[node] = batch[j]
+            b.levels[node] = lvl
+            b.n += 1
+            ids = cand_ids[j][cand_ids[j] >= 0]
+            dist = cand_dist[j][: len(ids)]
+            for lc in range(min(lvl, b.max_level), -1, -1):
+                mask = b.levels[ids] >= lc
+                ids_l, dist_l = ids[mask], dist[mask]
+                if not len(ids_l):
+                    continue
+                nbrs = b._select_heuristic(batch[j],
+                                           list(zip(dist_l, ids_l.tolist())), M)
+                b._set_nbrs(node, lc, nbrs)
+                mcap = m_max0 if lc == 0 else M
+                for e in nbrs:
+                    cur = b._nbrs(int(e), lc)
+                    if node not in cur:
+                        cur = np.append(cur, node).astype(np.int32)
+                    if len(cur) > mcap:
+                        ev = b.vectors[int(e)]
+                        cd = list(zip(_dist(metric, ev, b.vectors[cur]),
+                                      [int(c) for c in cur]))
+                        cur = b._select_heuristic(ev, cd, mcap)
+                    b._set_nbrs(int(e), lc, cur)
+            if lvl > b.max_level:
+                b.entry, b.max_level = node, lvl
+
+    return _permute_graph(b.graph(), order)
+
+
+def _permute_graph(g: HNSWGraph, order: np.ndarray) -> HNSWGraph:
+    """Graph built over permuted rows -> graph in original row order."""
+    n = g.n
+    new_of_old = np.asarray(order[:n], np.int64)   # builder id -> original id
+
+    def remap_ids(a):
+        out = np.full_like(a, -1)
+        valid = a >= 0
+        out[valid] = new_of_old[a[valid]]
+        return out
+
+    return HNSWGraph(
+        vectors=_scatter_rows(g.vectors, new_of_old),
+        neighbors0=_scatter_rows(remap_ids(g.neighbors0), new_of_old),
+        upper=np.stack([_scatter_rows(remap_ids(u), new_of_old) for u in g.upper])
+              if g.upper.shape[0] else g.upper,
+        levels=_scatter_rows(g.levels, new_of_old),
+        entry=int(new_of_old[g.entry]) if g.entry >= 0 else -1,
+        max_level=g.max_level,
+        metric=g.metric,
+        n=n,
+    )
+
+
+def _scatter_rows(a: np.ndarray, new_of_old: np.ndarray) -> np.ndarray:
+    out = np.empty_like(a)
+    out[new_of_old] = a
+    return out

@@ -1,0 +1,142 @@
+"""MeMemo-parity public API (paper §2.1, Code 1).
+
+TypeScript original:
+    const index = new HNSW({ distanceFunction: 'cosine' });
+    await index.bulkInsert(keys, values);
+    const { keys, distances } = await index.query(query, k);
+    index.exportIndex() / loadIndex()
+
+Python equivalent (camelCase aliases kept for 1:1 parity):
+    index = HNSW(distance_function="cosine", M=5, ef_construction=20)
+    index.bulk_insert(keys, values)
+    keys, distances = index.query(query, k=10)
+    index.export_index(path); HNSW.load_index(path)
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import hnsw as jhnsw
+from repro.core import hnsw_build as build
+from repro.core.flat import FlatIndex
+
+
+class HNSW:
+    def __init__(self, distance_function: str = "cosine", *, M: int = 16,
+                 ef_construction: int = 200, ef_search: int = 64,
+                 seed: int = 0, use_bulk_build: bool = False):
+        if distance_function not in ("cosine", "ip", "l2"):
+            raise ValueError(f"unknown distanceFunction {distance_function!r}")
+        self.metric = distance_function
+        self.M = M
+        self.ef_construction = ef_construction
+        self.ef_search = ef_search
+        self.seed = seed
+        self.use_bulk_build = use_bulk_build
+        self._keys: list[str] = []
+        self._builder: build.SequentialBuilder | None = None
+        self._graph: build.HNSWGraph | None = None
+        self._device_graph: jhnsw.DeviceGraph | None = None
+
+    # ------------------------------------------------------------------ api
+    def insert(self, key: str, value: Sequence[float]) -> None:
+        v = np.asarray(value, np.float32)
+        if self._builder is None:
+            self._builder = build.SequentialBuilder(
+                v.shape[-1], M=self.M, ef_construction=self.ef_construction,
+                metric=self.metric, seed=self.seed)
+        self._builder.insert(v)
+        self._keys.append(key)
+        self._graph = self._device_graph = None
+
+    def bulk_insert(self, keys: Sequence[str], values) -> None:
+        values = np.asarray(values, np.float32)
+        assert len(keys) == len(values), "keys/values length mismatch"
+        if self.use_bulk_build and self._builder is None:
+            self._graph = build.bulk_build(
+                values, M=self.M, ef_construction=self.ef_construction,
+                metric=self.metric, seed=self.seed)
+            self._keys = list(keys)
+            self._device_graph = None
+            return
+        for k, v in zip(keys, values):
+            self.insert(k, v)
+
+    bulkInsert = bulk_insert   # TS-parity alias
+
+    def _dg(self) -> jhnsw.DeviceGraph:
+        if self._graph is None:
+            if self._builder is None:
+                raise ValueError("index is empty")
+            self._graph = self._builder.graph()
+        if self._device_graph is None:
+            self._device_graph = jhnsw.to_device_graph(self._graph)
+        return self._device_graph
+
+    def query(self, query, k: int = 10, ef: int | None = None):
+        """-> (keys, distances); batched queries return lists of lists."""
+        q = np.asarray(query, np.float32)
+        squeeze = q.ndim == 1
+        ids, dists = jhnsw.search_graph(self._dg(), q, k=k,
+                                        ef=ef or self.ef_search)
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        keys = [[self._keys[i] if i >= 0 else None for i in row] for row in ids]
+        if squeeze:
+            return keys[0], dists[0]
+        return keys, dists
+
+    def exact_query(self, query, k: int = 10):
+        """Brute-force oracle over the same vectors."""
+        g = self._graph or self._builder.graph()
+        flat = FlatIndex(vectors=np.asarray(g.vectors), metric=self.metric)
+        d, i = flat.query(query, k)
+        return np.asarray(i), np.asarray(d)
+
+    @property
+    def size(self) -> int:
+        if self._graph is not None:
+            return self._graph.n
+        return self._builder.n if self._builder else 0
+
+    # ------------------------------------------------------- persistence
+    def export_index(self, path: str) -> None:
+        g = self._graph or (self._builder.graph() if self._builder else None)
+        if g is None:
+            raise ValueError("index is empty")
+        meta = {
+            "metric": self.metric, "M": self.M,
+            "ef_construction": self.ef_construction,
+            "ef_search": self.ef_search,
+            "entry": int(g.entry), "max_level": int(g.max_level),
+            "n": int(g.n), "keys": self._keys,
+        }
+        tmp = path + ".tmp.npz"          # atomic: write sidecar, then rename
+        np.savez_compressed(tmp[:-4],    # np.savez appends the .npz itself
+                            vectors=g.vectors, neighbors0=g.neighbors0,
+                            upper=g.upper, levels=g.levels,
+                            meta=np.frombuffer(
+                                json.dumps(meta).encode(), dtype=np.uint8))
+        os.replace(tmp, path)
+
+    exportIndex = export_index
+
+    @classmethod
+    def load_index(cls, path: str) -> "HNSW":
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(bytes(z["meta"]).decode())
+        idx = cls(distance_function=meta["metric"], M=meta["M"],
+                  ef_construction=meta["ef_construction"],
+                  ef_search=meta["ef_search"])
+        idx._graph = build.HNSWGraph(
+            vectors=z["vectors"], neighbors0=z["neighbors0"],
+            upper=z["upper"], levels=z["levels"], entry=meta["entry"],
+            max_level=meta["max_level"], metric=meta["metric"], n=meta["n"])
+        idx._keys = list(meta["keys"])
+        return idx
+
+    loadIndex = load_index

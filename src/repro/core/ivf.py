@@ -1,0 +1,113 @@
+"""IVF-Flat index — beyond-paper ANN backend (the paper cites PQ/FAISS-style
+coarse quantisation as the other major ANN family; IVF is its TPU-friendly
+core: fixed-shape gathers + the same fused distance kernels as HNSW).
+
+Build: a few Lloyd iterations of k-means (pure jnp) -> ``nlist`` centroids;
+rows go into fixed-capacity inverted lists (padded, -1). Search: score the
+query against centroids, take ``nprobe`` lists, gather their rows (one
+``gather_distance`` wave per query batch), exact top-k over candidates.
+Everything is fixed-shape, so the whole query path jit-compiles once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hnsw_build import normalize_rows
+from repro.kernels import ops
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IVFIndex:
+    vectors: jax.Array        # [N, D] (normalised if cosine)
+    centroids: jax.Array      # [nlist, D]
+    lists: jax.Array          # [nlist, cap] int32, -1 padded
+    metric: str
+
+    def tree_flatten(self):
+        return (self.vectors, self.centroids, self.lists), (self.metric,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, metric=aux[0])
+
+    @property
+    def n(self):
+        return self.vectors.shape[0]
+
+
+def kmeans(x: jnp.ndarray, k: int, iters: int = 8, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    init = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    cent = x[init]
+
+    def step(cent, _):
+        d = (jnp.sum(x * x, 1)[:, None] - 2 * x @ cent.T
+             + jnp.sum(cent * cent, 1)[None, :])
+        assign = jnp.argmin(d, 1)
+        sums = jax.ops.segment_sum(x, assign, k)
+        cnt = jax.ops.segment_sum(jnp.ones(x.shape[0]), assign, k)
+        new = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt[:, None], 1),
+                        cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d = (jnp.sum(x * x, 1)[:, None] - 2 * x @ cent.T
+         + jnp.sum(cent * cent, 1)[None, :])
+    return cent, jnp.argmin(d, 1)
+
+
+def build_ivf(vectors, *, nlist: int = 64, metric: str = "cosine",
+              iters: int = 8, seed: int = 0) -> IVFIndex:
+    v = np.asarray(vectors, np.float32)
+    if metric == "cosine":
+        v = normalize_rows(v)
+    vj = jnp.asarray(v)
+    cent, assign = kmeans(vj, nlist, iters, seed)
+    assign = np.asarray(assign)
+    counts = np.bincount(assign, minlength=nlist)
+    cap = int(counts.max())
+    lists = np.full((nlist, cap), -1, np.int32)
+    cursor = np.zeros(nlist, np.int64)
+    for i, a in enumerate(assign):
+        lists[a, cursor[a]] = i
+        cursor[a] += 1
+    return IVFIndex(vectors=vj, centroids=cent,
+                    lists=jnp.asarray(lists), metric=metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def _search(idx: IVFIndex, q: jax.Array, k: int, nprobe: int):
+    b = q.shape[0]
+    cap = idx.lists.shape[1]
+    # coarse: nearest nprobe centroids
+    cd = ops.gather_distance(
+        idx.centroids, q,
+        jnp.broadcast_to(jnp.arange(idx.centroids.shape[0]),
+                         (b, idx.centroids.shape[0])), metric=idx.metric)
+    _, probe = jax.lax.top_k(-cd, nprobe)                 # [B, nprobe]
+    cand = jnp.take(idx.lists, probe, axis=0).reshape(b, nprobe * cap)
+    valid = cand >= 0
+    ids = jnp.clip(cand, 0, idx.n - 1)
+    d = ops.gather_distance(idx.vectors, q, ids, metric=idx.metric)
+    d = jnp.where(valid, d, jnp.float32(3e38))
+    neg, j = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(ids, j, axis=1), -neg
+
+
+def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
+    q = jnp.asarray(queries, jnp.float32)
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    if idx.metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    ids, dists = _search(idx, q, k, min(nprobe, idx.centroids.shape[0]))
+    if squeeze:
+        return ids[0], dists[0]
+    return ids, dists

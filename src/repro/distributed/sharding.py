@@ -1,0 +1,163 @@
+"""Logical-axis sharding: one rules table maps model-semantic axis names to
+physical mesh axes; every with_sharding_constraint in the framework goes
+through here so a whole parallelism layout can be swapped by swapping rules.
+
+This is the mechanism behind the per-arch partitioning described in
+DESIGN.md section 4 (Megatron TP for LMs, EP for MoE/recsys tables, edge
+parallelism for GNNs, DB-row sharding for retrieval).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Default logical rules.  Values: mesh axis name, tuple of axis names, or None.
+# ---------------------------------------------------------------------------
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "kv_seq": "model",        # decode-time KV cache sequence split (flash-decode)
+    "qkv_embed": "model",
+    # LM params (Megatron column->row)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "layers": None,
+    # MoE
+    "dp_group": ("pod", "data"),
+    "expert": "model",
+    "expert_mlp": None,
+    "capacity": "data",
+    "tokens": ("pod", "data"),
+    # recsys
+    "table_rows": "model",
+    "feature_dim": None,
+    "fields": None,
+    # gnn
+    "edges": ("pod", "data"),
+    "nodes": "model",
+    "node_feat": None,
+    # retrieval (the paper's workload)
+    "db_rows": ("pod", "data", "model"),
+    "db_dim": None,
+    "queries": ("pod", "data"),
+    # optimizer
+    "zero": "data",
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: dict[str, Any] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, rules: dict[str, Any] | None = None):
+    """Activate a mesh + logical rules for model code built inside the block."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX.rules = merged
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def _mesh_axes_for(logical: str | None, mesh: Mesh) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    rule = _CTX.rules.get(logical, None)
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[str | None]) -> P:
+    """PartitionSpec for `shape` given per-dim logical axis names.
+
+    Drops mesh axes that do not evenly divide the corresponding dim, and
+    never assigns the same mesh axis to two dims (first dim wins).
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set[str] = set()
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        axes = [a for a in _mesh_axes_for(logical, mesh) if a not in used]
+        # keep the largest prefix of axes whose product divides dim
+        keep: list[str] = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        used.update(keep)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without a mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], *logical_axes: str | None) -> NamedSharding | None:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, logical_axes))
+
+
+def param_sharding(tree_axes, tree_shapes) -> Any:
+    """Map a pytree of logical-axes tuples + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shp: named_sharding(shp, *axes),
+        tree_axes,
+        tree_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def bytes_per_device(shape: Sequence[int], spec: P, mesh: Mesh, itemsize: int) -> int:
+    per = int(np.prod(shape)) * itemsize
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        for a in axes:
+            per //= mesh.shape[a]
+    return per

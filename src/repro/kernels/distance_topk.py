@@ -1,0 +1,91 @@
+"""Blocked distance-matrix + per-tile top-k kernel (flat exact search).
+
+The flat-index hot loop (and the recsys ``retrieval_cand`` cell): score a
+query block against the whole database and keep the k best. Two-phase
+split-K top-k:
+
+  phase 1 (this kernel): grid (B tiles x N tiles). Each step loads a
+    [BQ, D] query tile and a [BN, D] database tile into VMEM (BlockSpec),
+    computes the [BQ, BN] distance tile on the MXU, then extracts the tile's
+    top-k with k min-extraction passes (min/where/iota only — Mosaic-safe).
+  phase 2 (ops.flat_topk): one tiny ``lax.top_k`` over the [B, n_tiles*k]
+    partials.
+
+MXU alignment: D and BN should be multiples of 128 for peak; the kernel is
+shape-generic and the wrapper picks aligned tiles when it can.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38   # plain float: pallas kernels must not capture traced constants
+
+
+def _kernel(metric: str, k: int, q_ref, db_ref, dist_ref, idx_ref):
+    j = pl.program_id(1)
+    bn = db_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32)                    # [BQ, D]
+    x = db_ref[...].astype(jnp.float32)                   # [BN, D]
+    scores = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    if metric in ("cosine", "ip"):
+        d = 1.0 - scores                                  # [BQ, BN]
+    else:
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        xn = jnp.sum(x * x, axis=1)[None, :]
+        d = qn - 2.0 * scores + xn
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    base = j * bn
+
+    for i in range(k):                                    # static, k small
+        m = jnp.min(d, axis=1)                            # [BQ]
+        pos = jnp.min(jnp.where(d == m[:, None], col, jnp.int32(2 ** 30)),
+                      axis=1)                             # first argmin
+        dist_ref[:, i] = m
+        idx_ref[:, i] = pos + base
+        d = jnp.where(col == pos[:, None], BIG, d)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_n", "interpret"))
+def distance_topk_pallas(db: jax.Array, q: jax.Array, k: int,
+                         *, metric: str = "cosine", block_q: int = 128,
+                         block_n: int = 1024, interpret: bool = True):
+    """db [N,D], q [B,D] -> per-tile partials (dists [B,T*k], ids [B,T*k]).
+
+    Callers finish with a [B, T*k] -> [B, k] top-k merge (see ops.flat_topk).
+    """
+    b, d = q.shape
+    n = db.shape[0]
+    block_q = min(block_q, b)
+    while b % block_q:
+        block_q -= 1
+    block_n = min(block_n, n)
+    while n % block_n:
+        block_n -= 1
+    assert k <= block_n, (k, block_n)
+    tiles = n // block_n
+
+    grid = (b // block_q, tiles)
+    dists, ids = pl.pallas_call(
+        functools.partial(_kernel, metric, k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),      # q
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),      # db tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, tiles * k), jnp.float32),
+            jax.ShapeDtypeStruct((b, tiles * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, db)
+    return dists, ids

@@ -1,0 +1,81 @@
+"""Public jit'd wrappers for the kernel layer, with backend dispatch.
+
+Dispatch policy (env ``REPRO_PALLAS``):
+  "auto" (default) — Pallas (compiled) on TPU; pure-jnp reference elsewhere
+  "interpret"      — Pallas in interpret mode everywhere (kernel tests)
+  "off"            — always the jnp reference
+
+The jnp reference paths are the same oracles the kernel tests assert
+against, so behaviour is identical either way.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _mode() -> str:
+    return os.environ.get("REPRO_PALLAS", "auto")
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    m = _mode()
+    if m == "off":
+        return False, False
+    if m == "interpret":
+        return True, True
+    on_tpu = jax.default_backend() == "tpu"
+    return on_tpu, False
+
+
+# ---------------------------------------------------------------------------
+def gather_distance(vectors: jax.Array, q: jax.Array, ids: jax.Array,
+                    *, metric: str = "cosine") -> jax.Array:
+    """Fused gather+distance: vectors [N,D], q [B,D], ids [B,K] -> [B,K]."""
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels.gather_distance import gather_distance_pallas
+        return gather_distance_pallas(vectors, q, ids, metric=metric,
+                                      interpret=interp)
+    return _ref.gather_distance_ref(vectors, q, ids, metric=metric)
+
+
+def flat_topk(db: jax.Array, q: jax.Array, k: int,
+              *, metric: str = "cosine") -> tuple[jax.Array, jax.Array]:
+    """Exact k-NN: db [N,D], q [B,D] -> (dists [B,k], ids [B,k])."""
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels.distance_topk import distance_topk_pallas
+        pd, pi = distance_topk_pallas(db, q, k, metric=metric,
+                                      interpret=interp)
+        neg, j = jax.lax.top_k(-pd, k)                 # tiny [B, T*k] merge
+        return -neg, jnp.take_along_axis(pi, j, axis=1)
+    return _ref.distance_topk_ref(db, q, k, metric=metric)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  weights: jax.Array | None = None,
+                  *, combine: str = "sum") -> jax.Array:
+    """EmbeddingBag: table [R,E], ids [B,L] -> [B,E]."""
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels.embedding_bag import embedding_bag_pallas
+        return embedding_bag_pallas(table, ids, weights, combine=combine,
+                                    interpret=interp)
+    return _ref.embedding_bag_ref(table, ids, weights, combine=combine)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 cur_len) -> jax.Array:
+    """Decode attention: q [B,H,Dh], k/v [B,S,KVH,Dh] -> [B,H,Dh]."""
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels.flash_decode import flash_decode_pallas
+        return flash_decode_pallas(q, k, v, cur_len, interpret=interp)
+    return _ref.flash_decode_ref(q, k, v, jnp.asarray(cur_len, jnp.int32))

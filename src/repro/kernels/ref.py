@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Every kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_distance_ref(vectors: jax.Array, q: jax.Array, ids: jax.Array,
+                        *, metric: str = "cosine") -> jax.Array:
+    """vectors [N,D], q [B,D], ids [B,K] (valid, clamped) -> dists [B,K]."""
+    x = jnp.take(vectors, ids, axis=0)                     # [B,K,D]
+    if metric in ("cosine", "ip"):
+        return 1.0 - jnp.einsum("bd,bkd->bk", q.astype(jnp.float32),
+                                x.astype(jnp.float32))
+    d = x.astype(jnp.float32) - q.astype(jnp.float32)[:, None, :]
+    return jnp.einsum("bkd,bkd->bk", d, d)
+
+
+def distance_topk_ref(db: jax.Array, q: jax.Array, k: int,
+                      *, metric: str = "cosine") -> tuple[jax.Array, jax.Array]:
+    """db [N,D], q [B,D] -> (dists [B,k] ascending, ids [B,k])."""
+    if metric in ("cosine", "ip"):
+        d = 1.0 - jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
+                             db.astype(jnp.float32))
+    else:
+        d = (jnp.sum(q.astype(jnp.float32) ** 2, -1)[:, None]
+             - 2.0 * jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
+                                db.astype(jnp.float32))
+             + jnp.sum(db.astype(jnp.float32) ** 2, -1)[None, :])
+    neg, ids = jax.lax.top_k(-d, k)
+    return -neg, ids
+
+
+def embedding_bag_ref(table: jax.Array, ids: jax.Array,
+                      weights: jax.Array | None = None,
+                      *, combine: str = "sum") -> jax.Array:
+    """table [R,E], ids [B,L] -> bags [B,E]; weights [B,L] optional."""
+    g = jnp.take(table, ids, axis=0).astype(jnp.float32)   # [B,L,E]
+    if weights is not None:
+        g = g * weights.astype(jnp.float32)[..., None]
+    s = jnp.sum(g, axis=1)
+    if combine == "mean":
+        n = (ids.shape[1] if weights is None
+             else jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9))
+        s = s / n
+    return s
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cur_len: jax.Array) -> jax.Array:
+    """q [B,H,Dh]; k,v [B,S,KVH,Dh]; mask pos >= cur_len -> out [B,H,Dh]."""
+    b, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh).astype(jnp.float32) * dh ** -0.5
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(s)[None, None, None, :] < cur_len
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, dh)

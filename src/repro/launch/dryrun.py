@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+and extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh pod --out results.json
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+
+The XLA_FLAGS line above MUST run before any jax import: 512 host devices
+stand in for the production pods (16x16 single pod, 2x16x16 multi-pod).
+Everything lowered here uses ShapeDtypeStructs — no real allocation.
+
+Roofline (TPU v5e targets): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI
+per link. The parsed HLO is the per-device SPMD module, so all terms are
+per-device already. FLOPs/bytes/collective-bytes come from the scan-aware
+HLO analyzer (launch/hlo_analysis.py) because XLA's cost_analysis counts
+loop bodies once (EXPERIMENTS.md §Methodology).
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import gc            # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ALL_ARCHS, get_config          # noqa: E402
+from repro.launch.hlo_analysis import analyze            # noqa: E402
+from repro.launch.mesh import make_production_mesh, tp_size  # noqa: E402
+from repro.launch.model_costs import model_bytes         # noqa: E402
+from repro.launch.steps import build_cell                # noqa: E402
+from repro.utils import human_bytes, logger              # noqa: E402
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (conservative: 1 link)
+HBM_PER_CHIP = 16 * 1024 ** 3
+
+# ---------------------------------------------------------------------------
+# Tuned per-cell configurations — the outcome of the EXPERIMENTS.md §Perf
+# hillclimbs. ``--preset tuned`` applies these; ``--preset baseline`` runs
+# the paper-faithful/naive configuration for comparison.
+# ---------------------------------------------------------------------------
+_FSDP_RULES = {
+    "heads": ["data", "model"], "mlp": ["data", "model"],
+    "vocab": ["data", "model"], "kv_heads": ["data", "model"],
+    "act_heads": None, "batch": ["data", "model"],
+    "tokens": ["data", "model"],
+}
+_LM_TRAIN_DENSE = {
+    "chunked_loss": 512, "opt_like_params": True, "param_dtype": "bfloat16",
+    "attn_impl": "packed", "attn_block_k": 512, "rules": _FSDP_RULES,
+}
+_LM_TRAIN_MOE = {"chunked_loss": 512}      # grouped dispatch is code-default
+_RETRIEVAL = {"db_dtype": "bfloat16", "wire_bf16": True}
+_KVQ = {"kv_quant": True}                  # int8 KV cache (decode cells)
+
+TUNED: dict = {
+    ("llama3-8b", "train_4k"): _LM_TRAIN_DENSE,
+    ("h2o-danube-3-4b", "train_4k"): _LM_TRAIN_DENSE,
+    ("minitron-8b", "train_4k"): _LM_TRAIN_DENSE,
+    ("olmoe-1b-7b", "train_4k"): _LM_TRAIN_MOE,
+    ("granite-moe-3b-a800m", "train_4k"): {**_LM_TRAIN_MOE,
+                                           "moe_pad_experts": 48,
+                                           "vocab": 49408},   # pad 49155
+    ("granite-moe-3b-a800m", "prefill_32k"): {"moe_pad_experts": 48},
+    ("granite-moe-3b-a800m", "decode_32k"): {**_KVQ, "moe_pad_experts": 48},
+    ("llama3-8b", "decode_32k"): _KVQ,
+    ("h2o-danube-3-4b", "decode_32k"): _KVQ,
+    ("h2o-danube-3-4b", "long_500k"): _KVQ,
+    ("minitron-8b", "decode_32k"): _KVQ,
+    ("olmoe-1b-7b", "decode_32k"): _KVQ,
+    ("mememo", "query_1m"): _RETRIEVAL,
+    ("mememo", "query_rt"): _RETRIEVAL,
+    ("mind", "retrieval_cand"): _RETRIEVAL,
+    ("wide-deep", "retrieval_cand"): _RETRIEVAL,
+    ("bert4rec", "retrieval_cand"): _RETRIEVAL,
+    ("fm", "retrieval_cand"): _RETRIEVAL,
+}
+
+
+# ---------------------------------------------------------------------------
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs per step, whole job (all devices)."""
+    arch = get_config(arch_id)
+    shape = arch.shape(shape_name)
+    m = arch.model
+    if arch.family == "lm":
+        n_act = m.active_param_count
+        if shape.kind == "train":
+            tokens = shape["global_batch"] * shape["seq_len"]
+            return 6.0 * n_act * tokens
+        if shape.kind == "prefill":
+            tokens = shape["global_batch"] * shape["seq_len"]
+            return 2.0 * n_act * tokens
+        # decode: one token per sequence + attention over the cache
+        b, s = shape["global_batch"], shape["seq_len"]
+        s_eff = min(s, m.sliding_window or s)
+        attn = 4.0 * b * s_eff * m.n_layers * m.n_kv_heads * m.dh
+        return 2.0 * n_act * b + attn
+    if arch.family == "gnn":
+        h = m.d_hidden
+        if shape.name == "molecule":
+            e_eff = shape["batch"] * shape["n_edges"]
+            n_eff = shape["batch"] * shape["n_nodes"]
+        elif shape.kind == "sampled_train":
+            b, f1, f2 = shape["batch_nodes"], shape["fanout1"], shape["fanout2"]
+            n_eff = b * (1 + f1 + f1 * f2)
+            e_eff = b * (f1 + f1 * f2)
+        else:
+            n_eff, e_eff = shape["n_nodes"], shape["n_edges"]
+        d = shape["d_feat"]
+        fwd = 2.0 * n_eff * (d * h + h * h) * 2 + 2.0 * e_eff * (d + h)
+        return 3.0 * fwd if "train" in shape.kind else fwd
+    if arch.family == "recsys":
+        if shape.kind == "retrieval":
+            nq = shape["batch"] * max(m.n_interests, 1)
+            return 2.0 * nq * shape["n_candidates"] * m.embed_dim
+        b = shape["batch"]
+        if m.kind in ("fm", "wide_deep"):
+            per = 2.0 * m.n_sparse * m.embed_dim
+            for a, bdim in zip((m.n_sparse * m.embed_dim + m.n_dense,)
+                               + tuple(m.mlp_dims), tuple(m.mlp_dims) + (1,)):
+                per += 2.0 * a * bdim
+        elif m.kind == "bert4rec":
+            d, s = m.embed_dim, m.seq_len
+            per_tok = (12 * d * d + 4 * d * s) * m.n_blocks
+            per = s * per_tok
+            if shape.kind == "train":       # M=S/5 masked-position logits
+                per += (s // 5) * 2 * d * m.n_items
+        else:  # mind
+            d, s = m.embed_dim, m.seq_len
+            per = 2 * s * d * d + m.capsule_iters * 4 * m.n_interests * s * d
+        fwd = per * b
+        return 3.0 * fwd if shape.kind == "train" else fwd
+    # mememo retrieval
+    return 2.0 * shape["batch"] * shape["n_candidates"] * shape["dim"]
+
+
+# ---------------------------------------------------------------------------
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
+             tuning: dict | None = None) -> dict:
+    chips = mesh.devices.size
+    t0 = time.time()
+    jitted, specs = build_cell(arch_id, shape_name, mesh, tuning)
+    lowered = jitted.lower(*specs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = analyze(compiled.as_text())
+    ca = compiled.cost_analysis() or {}
+
+    mf_total = model_flops(arch_id, shape_name)
+    mf_dev = mf_total / chips
+    mb_dev = model_bytes(arch_id, shape_name, chips, tp_size(mesh), tuning)
+    t_comp = hlo["flops"] / PEAK_FLOPS
+    t_mem = mb_dev / HBM_BW                     # analytic TPU-target bytes
+    t_mem_hlo = hlo["bytes"] / HBM_BW           # CPU-HLO upper bound
+    t_coll = hlo["collective_bytes"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+
+    row = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "chips": int(chips),
+        "status": "ok",
+        "compile_s": round(t_compile, 1), "lower_s": round(t_lower, 1),
+        "hlo_flops_per_dev": hlo["flops"],
+        "hlo_bytes_per_dev": hlo["bytes"],
+        "model_bytes_per_dev": mb_dev,
+        "coll_bytes_per_dev": hlo["collective_bytes"],
+        "coll_by_kind": {k: round(v) for k, v in hlo["collectives"].items()},
+        "dynamic_whiles": hlo["dynamic_whiles"],
+        "xla_flops_raw": ca.get("flops", 0.0),
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_memory_hlo_s": t_mem_hlo, "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "roofline_fraction": (t_comp / step_time) if step_time > 0 else 0.0,
+        "model_flops_per_dev": mf_dev,
+        "useful_ratio": mf_dev / hlo["flops"] if hlo["flops"] else 0.0,
+        "arg_bytes_per_dev": mem.argument_size_in_bytes,
+        "temp_bytes_per_dev": mem.temp_size_in_bytes,
+        "total_bytes_per_dev": int(per_dev_bytes),
+        "fits_hbm": bool(per_dev_bytes <= HBM_PER_CHIP),
+        "tuning": tuning or {},
+    }
+    del compiled, lowered, jitted
+    gc.collect()
+    return row
+
+
+def iter_cells(archs, shapes):
+    for arch_id in archs:
+        arch = get_config(arch_id)
+        for shape in arch.shapes:
+            if shapes and shape.name not in shapes:
+                continue
+            if shape.kind == "build":
+                continue            # host-side builder, not a lowered program
+            yield arch_id, shape.name, (shape.name in arch.skip_shapes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tuning", default=None,
+                    help="JSON dict of implementation overrides")
+    ap.add_argument("--preset", default="baseline",
+                    choices=["baseline", "tuned"])
+    args = ap.parse_args()
+
+    archs = args.arch or list(ALL_ARCHS)
+    tuning = json.loads(args.tuning) if args.tuning else None
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    rows = []
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_name, skipped in iter_cells(archs, args.shape):
+            tag = f"{arch_id} x {shape_name} x {mesh_name}"
+            if skipped:
+                logger.info(f"SKIP  {tag} (mandated: full attention at 500k, "
+                            "see DESIGN.md section 5)")
+                rows.append({"arch": arch_id, "shape": shape_name,
+                             "mesh": mesh_name, "status": "skipped_mandated"})
+                continue
+            cell_tuning = tuning
+            if cell_tuning is None and args.preset == "tuned":
+                cell_tuning = TUNED.get((arch_id, shape_name))
+            try:
+                row = run_cell(arch_id, shape_name, mesh, mesh_name,
+                               cell_tuning)
+                logger.info(
+                    f"OK    {tag}: compile={row['compile_s']}s "
+                    f"bottleneck={row['bottleneck']} "
+                    f"t=({row['t_compute_s']:.2e},{row['t_memory_s']:.2e},"
+                    f"{row['t_collective_s']:.2e})s "
+                    f"mem/dev={human_bytes(row['total_bytes_per_dev'])} "
+                    f"fits={row['fits_hbm']} useful={row['useful_ratio']:.2f}")
+            except Exception as e:
+                logger.info(f"FAIL  {tag}: {type(e).__name__}: {str(e)[:200]}")
+                row = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                       "status": "failed", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+            rows.append(row)
+            if args.out:           # incremental write (long runs)
+                with open(args.out, "w") as f:
+                    json.dump(rows, f, indent=1)
+
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    fail = sum(1 for r in rows if r.get("status") == "failed")
+    skip = sum(1 for r in rows if r.get("status") == "skipped_mandated")
+    logger.info(f"dry-run complete: {ok} ok, {fail} failed, {skip} skipped "
+                f"(mandated)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        logger.info(f"wrote {args.out}")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,65 @@
+"""Production mesh construction.
+
+The production target is a TPU v5e pod slice: 16x16 = 256 chips per pod,
+2 pods = 512 chips for the multi-pod configuration.  Axis semantics:
+
+  pod    -- crosses the data-center interconnect (DCI); only gradient
+            all-reduces (data parallelism) travel this axis.
+  data   -- intra-pod data parallelism (batch sharding, ZeRO-1 state shards,
+            GNN edge parallelism, MoE token sharding).
+  model  -- tensor/expert/table parallelism (Megatron TP, MoE EP, recsys
+            embedding-row sharding, retrieval DB sharding, decode KV
+            sequence splits).
+
+NOTE: constructed via functions, never at import time, so importing this
+module never touches jax device state (smoke tests must keep seeing the
+single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The graded production mesh: (16,16) single pod / (2,16,16) multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devs)}; "
+            "the dry run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices actually exist (CPU tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes over which the global batch is sharded (DP axes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def dp_size(mesh: Mesh) -> int:
+    s = 1
+    for a in batch_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

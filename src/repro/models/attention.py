@@ -1,0 +1,282 @@
+"""Blocked (flash-style) attention in pure JAX, GQA-aware.
+
+Three lowered regimes:
+  * ``blocked_attention`` — training/prefill, nested scan over (q blocks, kv
+    blocks) with running log-sum-exp; O(block) memory. ``impl='masked'``
+    computes the full rectangle with causal masking (2x FLOP waste on the
+    causal upper triangle — the *baseline*); ``impl='packed'`` packs the
+    causal lower triangle onto a constant-work scan so compiled FLOPs match
+    useful FLOPs (hillclimb lever, see EXPERIMENTS.md §Perf).
+  * ``swa_blocked_attention`` — sliding-window: per q block only the
+    ``window/bk + 1`` kv blocks in band are touched (sub-quadratic; the
+    long_500k path for h2o-danube).
+  * ``decode_attention`` — single new token vs a KV cache; direct reduction,
+    f32 accumulation. KV-sequence sharding turns the softmax reductions into
+    small all-reduces (flash-decode split-K without a hand-rolled collective).
+
+All einsums accumulate in float32 (``preferred_element_type``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+
+def pick_block(s: int, b: int) -> int:
+    """Largest divisor of ``s`` that is <= ``b`` (so odd test lengths work)."""
+    b = min(b, s)
+    while s % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q [B,bq,H,Dh], k [B,bk,KVH,Dh] -> scores [B,H,bq,bk] (f32)."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    return s.reshape(b, kvh * g, sq, k.shape[1])
+
+
+def _gqa_values(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p [B,H,bq,bk] (f32), v [B,bk,KVH,Dh] -> [B,bq,H,Dh] (f32)."""
+    b, h, sq, sk = p.shape
+    kvh = v.shape[2]
+    g = h // kvh
+    pg = p.reshape(b, kvh, g, sq, sk)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v, preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _merge_block(carry, scores, v_blk, block_mask):
+    """Online-softmax merge of one kv block. carry = (m, l, acc) in f32.
+
+    m [B,H,bq], l [B,H,bq], acc [B,bq,H,Dh].
+    """
+    m, l, acc = carry
+    scores = jnp.where(block_mask, scores, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)   # fully-masked guard
+    p = jnp.where(block_mask, jnp.exp(scores - m_safe[..., None]), 0.0)
+    alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_safe))
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None].swapaxes(1, 2) + _gqa_values(p, v_blk)
+    return (m_new, l_new, acc_new)
+
+
+def _finalize(l, acc, dtype):
+    return (acc / jnp.maximum(l, 1e-30)[..., None].swapaxes(1, 2)).astype(dtype)
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 1024,
+    impl: str = "masked",
+) -> jax.Array:
+    """Flash-style attention. q [B,S,H,Dh]; k,v [B,Sk,KVH,Dh] -> [B,S,H,Dh]."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    block_q = pick_block(sq, block_q)
+    block_k = pick_block(sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    if impl == "packed" and causal and sq == sk and block_q == block_k and nq % 2 == 0:
+        return _packed_causal_attention(q, k, v, blk=block_q)
+
+    sm_scale = dh ** -0.5
+    qb = q.reshape(b, nq, block_q, h, dh)
+
+    def q_block_step(_, iq):
+        q_i = jax.lax.dynamic_index_in_dim(qb, iq, axis=1, keepdims=False) * sm_scale
+        q_pos = iq * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, jk):
+            k_j = jax.lax.dynamic_slice_in_dim(k, jk * block_k, block_k, axis=1)
+            v_j = jax.lax.dynamic_slice_in_dim(v, jk * block_k, block_k, axis=1)
+            scores = _gqa_scores(q_i, k_j)                         # [B,H,bq,bk]
+            if causal:
+                k_pos = jk * block_k + jnp.arange(block_k)
+                mask = (q_pos[:, None] >= k_pos[None, :])[None, None]
+            else:
+                mask = jnp.ones((1, 1, block_q, block_k), dtype=bool)
+            return _merge_block(carry, scores, v_j, mask), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, block_q, h, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return None, _finalize(l, acc, q.dtype)
+
+    _, out = jax.lax.scan(q_block_step, None, jnp.arange(nq))
+    # out: [nq, B, bq, H, Dh] -> [B, S, H, Dh]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def _packed_causal_attention(q, k, v, *, blk: int):
+    """Causal attention with the lower triangle packed onto a rectangle.
+
+    Pair q-block row ``i`` (needs ``i+1`` kv blocks) with row ``nb-1-i``
+    (needs ``nb-i`` kv blocks): together ``nb+1`` kv-block units per scan
+    step — constant work, zero masked-out whole blocks. Compiled attention
+    FLOPs ≈ useful causal FLOPs (+ the diagonal half-blocks), versus 2x for
+    the masked baseline.
+    """
+    b, s, h, dh = q.shape
+    kvh = v.shape[2]
+    nb = s // blk
+    half = nb // 2
+    sm_scale = dh ** -0.5
+    qb = q.reshape(b, nb, blk, h, dh)
+    kb = k.reshape(b, nb, blk, kvh, dh)
+    vb = v.reshape(b, nb, blk, kvh, dh)
+    n_slots = nb + 1
+
+    def step(_, i):
+        i_lo = i                      # row needing i+1 kv blocks
+        i_hi = nb - 1 - i             # row needing nb-i kv blocks
+        q_lo = jax.lax.dynamic_index_in_dim(qb, i_lo, 1, keepdims=False) * sm_scale
+        q_hi = jax.lax.dynamic_index_in_dim(qb, i_hi, 1, keepdims=False) * sm_scale
+
+        def slot(carry, s_idx):
+            (m_lo, l_lo, a_lo, m_hi, l_hi, a_hi) = carry
+            is_lo = s_idx <= i_lo
+            kv_idx = jnp.where(is_lo, s_idx, s_idx - (i_lo + 1))
+            k_j = jax.lax.dynamic_index_in_dim(kb, kv_idx, 1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, kv_idx, 1, keepdims=False)
+            q_i = jnp.where(is_lo, q_lo, q_hi)
+            row = jnp.where(is_lo, i_lo, i_hi)
+            # select the active carry, merge once, scatter back
+            sel = lambda a_, b_: jnp.where(is_lo, a_, b_)
+            m_c, l_c, a_c = sel(m_lo, m_hi), sel(l_lo, l_hi), sel(a_lo, a_hi)
+            scores = _gqa_scores(q_i, k_j)
+            q_pos = row * blk + jnp.arange(blk)
+            k_pos = kv_idx * blk + jnp.arange(blk)
+            mask = (q_pos[:, None] >= k_pos[None, :])[None, None]
+            m_n, l_n, a_n = _merge_block((m_c, l_c, a_c), scores, v_j, mask)
+            upd = lambda new, old, active: jnp.where(active, new, old)
+            out = (
+                upd(m_n, m_lo, is_lo), upd(l_n, l_lo, is_lo), upd(a_n, a_lo, is_lo),
+                upd(m_n, m_hi, ~is_lo), upd(l_n, l_hi, ~is_lo), upd(a_n, a_hi, ~is_lo),
+            )
+            return out, None
+
+        m0 = jnp.full((b, h, blk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, blk), jnp.float32)
+        a0 = jnp.zeros((b, blk, h, dh), jnp.float32)
+        carry, _ = jax.lax.scan(slot, (m0, l0, a0, m0, l0, a0), jnp.arange(n_slots))
+        m_lo, l_lo, a_lo, m_hi, l_hi, a_hi = carry
+        return None, (i_lo, _finalize(l_lo, a_lo, q.dtype),
+                      i_hi, _finalize(l_hi, a_hi, q.dtype))
+
+    _, (idx_lo, out_lo, idx_hi, out_hi) = jax.lax.scan(step, None, jnp.arange(half))
+    order = jnp.concatenate([idx_lo, idx_hi])            # [nb]
+    blocks = jnp.concatenate([out_lo, out_hi], axis=0)   # [nb, B, blk, H, Dh]
+    blocks = blocks[jnp.argsort(order)]
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def swa_blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Causal sliding-window attention; touches only in-band kv blocks."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    block_q = pick_block(sq, block_q)
+    block_k = pick_block(sk, block_k)
+    if sk <= window:  # window covers every prefix -> plain causal
+        return blocked_attention(q, k, v, causal=True,
+                                 block_q=block_q, block_k=block_k)
+    nq = sq // block_q
+    # kv span needed by one q block: window + block_q positions, block-aligned
+    span = min(((window + block_q) // block_k + 1) * block_k, sk)
+    sm_scale = dh ** -0.5
+    qb = q.reshape(b, nq, block_q, h, dh)
+
+    def q_block_step(_, iq):
+        q_i = jax.lax.dynamic_index_in_dim(qb, iq, 1, keepdims=False) * sm_scale
+        q_lo = iq * block_q
+        start = jnp.clip(q_lo + block_q - span, 0, sk - span)
+        k_w = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        v_w = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        scores = _gqa_scores(q_i, k_w)                       # [B,H,bq,span]
+        q_pos = q_lo + jnp.arange(block_q)
+        k_pos = start + jnp.arange(span)
+        mask = (q_pos[:, None] >= k_pos[None, :]) & \
+               (k_pos[None, :] > q_pos[:, None] - window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        p = jnp.exp(scores - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = _gqa_values(p / jnp.maximum(l, 1e-30), v_w)
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_block_step, None, jnp.arange(nq))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """One-token attention against the cache.
+
+    q [B,1,H,Dh]; k_cache/v_cache [B,S,KVH,Dh]; ``cur_len``: number of valid
+    positions — scalar or per-sequence [B] (continuous batching: every slot
+    carries its own length). Returns [B,1,H,Dh]. With the cache sharded
+    along S ("kv_seq" -> model axis) the max/sum reductions lower to tiny
+    all-reduces: split-K flash-decode, scheduled by the SPMD partitioner.
+    """
+    b, _, h, dh = q.shape
+    s = k_cache.shape[1]
+    k_cache = shard(k_cache, "batch", "kv_seq", None, None)
+    v_cache = shard(v_cache, "batch", "kv_seq", None, None)
+    scores = _gqa_scores(q * dh ** -0.5, k_cache)       # [B,H,1,S]
+    pos = jnp.arange(s)
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    valid = pos[None, :] < cur[:, None]                 # [B,S]
+    if window is not None:
+        valid &= pos[None, :] >= cur[:, None] - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = _gqa_values(p, v_cache)
+    return out.astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal=True, window=None):
+    """O(S^2)-memory oracle for tests."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scores = _gqa_scores(q * dh ** -0.5, k)
+    q_pos = jnp.arange(sq) + (sk - sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_values(p, v).astype(q.dtype)

@@ -1,0 +1,78 @@
+"""Shared model building blocks (pure-JAX, no flax): norms, RoPE, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim//2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                  # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    """Mean cross-entropy; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def sigmoid_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def l2_normalize(x: jax.Array, axis: int = -1, eps: float = 1e-12) -> jax.Array:
+    n = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axis, keepdims=True))
+    return (x.astype(jnp.float32) / jnp.maximum(n, eps)).astype(x.dtype)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(tree))

@@ -1,0 +1,114 @@
+"""Bidirectional transformer encoder (pre-LN, GELU FFN, learned positions).
+
+Two consumers:
+  * the RAG query/document embedder (GTE-small-style, 384-d — paper §2.1);
+  * the BERT4Rec backbone (items as vocab, masked-item training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.attention import blocked_attention
+from repro.models.common import layer_norm, normal_init, l2_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    vocab: int
+    d_model: int
+    n_blocks: int
+    n_heads: int
+    d_ff: int
+    max_len: int
+    norm_eps: float = 1e-12
+    pool: str = "mean"          # mean | cls | none
+
+
+def init_encoder(key, cfg: EncoderConfig) -> dict:
+    L, D, F = cfg.n_blocks, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    return {
+        "embed": normal_init(ks[0], (cfg.vocab, D), 0.02),
+        "pos": normal_init(ks[1], (cfg.max_len, D), 0.02),
+        "layers": {
+            "ln1_g": jnp.ones((L, D)), "ln1_b": jnp.zeros((L, D)),
+            "ln2_g": jnp.ones((L, D)), "ln2_b": jnp.zeros((L, D)),
+            "wqkv": normal_init(ks[2], (L, D, 3 * D), 0.02),
+            "wo": normal_init(ks[3], (L, D, D), 0.02 / (2 * L) ** 0.5),
+            "w1": normal_init(ks[4], (L, D, F), 0.02),
+            "b1": jnp.zeros((L, F)),
+            "w2": normal_init(ks[5], (L, F, D), 0.02 / (2 * L) ** 0.5),
+            "b2": jnp.zeros((L, D)),
+        },
+        "final_g": jnp.ones((D,)), "final_b": jnp.zeros((D,)),
+    }
+
+
+def encoder_param_axes(cfg: EncoderConfig) -> dict:
+    return {
+        "embed": ("vocab", "embed"), "pos": (None, "embed"),
+        "layers": {
+            "ln1_g": ("layers", "embed"), "ln1_b": ("layers", "embed"),
+            "ln2_g": ("layers", "embed"), "ln2_b": ("layers", "embed"),
+            "wqkv": ("layers", "embed", "heads"),
+            "wo": ("layers", "heads", "embed"),
+            "w1": ("layers", "embed", "mlp"), "b1": ("layers", "mlp"),
+            "w2": ("layers", "mlp", "embed"), "b2": ("layers", "embed"),
+        },
+        "final_g": ("embed",), "final_b": ("embed",),
+    }
+
+
+def encoder_forward(params: dict, cfg: EncoderConfig, tokens: jax.Array,
+                    mask: jax.Array | None = None,
+                    dtype=jnp.float32) -> jax.Array:
+    """tokens [B,S] -> hidden [B,S,D] (or pooled [B,D] per cfg.pool)."""
+    B, S = tokens.shape
+    D, H = cfg.d_model, cfg.n_heads
+    x = (jnp.take(params["embed"], tokens, axis=0)
+         + params["pos"][None, :S]).astype(dtype)
+    x = shard(x, "batch", "seq", "act_embed")
+
+    def block(x, lp):
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        qkv = jnp.einsum("bsd,de->bse", h, lp["wqkv"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, S, H, D // H)
+        k = k.reshape(B, S, H, D // H)
+        v = v.reshape(B, S, H, D // H)
+        attn = blocked_attention(q, k, v, causal=False,
+                                 block_q=min(256, S), block_k=min(256, S))
+        out = jnp.einsum("bsd,de->bse", attn.reshape(B, S, D),
+                         lp["wo"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        x = x + out
+        h = layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, lp["w1"].astype(dtype),
+                                   preferred_element_type=jnp.float32)
+                        + lp["b1"].astype(jnp.float32))
+        out = jnp.einsum("bsf,fd->bsd", g.astype(dtype),
+                         lp["w2"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        return x + out + lp["b2"].astype(dtype), None
+
+    # remat per block: without it the backward saves every attention
+    # intermediate of every block (bert4rec train: 83 GiB/device -> fits)
+    block = jax.checkpoint(block, prevent_cse=False)
+    x, _ = jax.lax.scan(block, x, params["layers"])
+    x = layer_norm(x, params["final_g"], params["final_b"], cfg.norm_eps)
+    if cfg.pool == "none":
+        return x
+    if cfg.pool == "cls":
+        return x[:, 0]
+    if mask is not None:
+        w = mask.astype(jnp.float32)[..., None]
+        pooled = jnp.sum(x * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+    else:
+        pooled = jnp.mean(x, axis=1)
+    return l2_normalize(pooled, axis=-1)

@@ -1,0 +1,155 @@
+"""Top-k token-choice MoE with capacity dropping (GShard/Switch style),
+expert-parallel over the "model" mesh axis.
+
+Dispatch uses the scatter/gather formulation (position-in-expert via one-hot
+cumsum) instead of the [T, E, C] one-hot einsum: at 1M tokens x 64 experts
+the one-hot dispatch tensor alone would be ~40 GiB x top_k, while the
+scatter form keeps peak extra memory at the [E, C, D] expert buffers.
+
+Dispatch locality: tokens are reshaped to [G, T/G, D] where G = the data-
+parallel shard count, and every dispatch op (cumsum, gather, combine
+scatter) carries the G dim, constrained to the ("pod","data") axes. Each
+data shard therefore routes its own tokens with LOCAL capacity and the
+combine never materialises a replicated [T, D] reduce — EP traffic is only
+the expert transfer on the model axis. (Same effect as a hand-written
+shard_map dispatch, but expressed in pure pjit; the partial-auto shard_map
+version tripped an XLA CPU crash — see EXPERIMENTS.md §Perf B.)
+
+Expert-count alignment: ``pad_experts_to`` adds dead experts (masked from
+routing) so the expert dim divides the mesh axis — granite's 40 experts pad
+to 48 for a 16-way axis; without it the partitioner falls back to
+TP-within-expert and all-reduces multi-TB expert buffers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import current_mesh, shard
+from repro.models.common import normal_init
+
+
+def init_moe_layer(key, n_layers: int, d_model: int, cfg: MoEConfig) -> dict:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E, F = cfg.n_slots, cfg.d_ff
+    L, D = n_layers, d_model
+    return {
+        "router": normal_init(kr, (L, D, E), 0.02),
+        "we1": normal_init(k1, (L, E, D, F), 0.02),
+        "we3": normal_init(k3, (L, E, D, F), 0.02),
+        "we2": normal_init(k2, (L, E, F, D), 0.02 / (2 * L) ** 0.5),
+    }
+
+
+def moe_layer_axes() -> dict:
+    return {
+        "router": ("layers", "embed", "expert"),
+        "we1": ("layers", "expert", "embed", "expert_mlp"),
+        "we3": ("layers", "expert", "embed", "expert_mlp"),
+        "we2": ("layers", "expert", "expert_mlp", "embed"),
+    }
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8 * ((c + 7) // 8), 8)
+
+
+def _dp_groups(T: int) -> int:
+    """Number of token groups = product of the mesh axes the active
+    "dp_group" rule maps to (1 without a mesh). With the default rule this
+    is the data-parallel shard count; the moe-fsdp tuning maps it to every
+    axis, which shards tokens 256-way and replicates (FSDP-gathers) the
+    expert weights instead — zero token movement (EXPERIMENTS.md §Perf B).
+    """
+    from repro.distributed.sharding import _CTX, _mesh_axes_for
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for a in _mesh_axes_for("dp_group", mesh):
+        g *= mesh.shape[a]
+    if g <= 1 or T % g or (T // g) < 1:
+        return 1
+    return g
+
+
+def moe_ffn(p: dict, cfg: MoEConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [T, D] tokens -> (out [T, D], aux_loss scalar).
+
+    ``p`` holds this layer's slices: router [D,E], we1/we3 [E,D,F], we2 [E,F,D].
+    """
+    T, D = x.shape
+    G = _dp_groups(T)
+    xg = shard(x.reshape(G, T // G, D), "dp_group", None, None)
+    out, aux = _moe_ffn_grouped(p, cfg, xg)
+    return shard(out.reshape(T, D), "tokens", None), aux
+
+
+def _moe_ffn_grouped(p: dict, cfg: MoEConfig, xg: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """xg: [G, Tl, D] (G sharded over the data axes) -> ([G, Tl, D], aux)."""
+    G, Tl, D = xg.shape
+    E, K = cfg.n_slots, cfg.top_k
+    C = capacity(Tl, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if cfg.n_slots > cfg.n_experts:     # EP padding: dead experts never route
+        alive = jnp.arange(E) < cfg.n_experts
+        logits = jnp.where(alive[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G,Tl,E]
+    gate_w, ids = jax.lax.top_k(probs, K)                        # [G,Tl,K]
+    gate_w = gate_w / jnp.maximum(jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    # --- position of each assignment within its expert (per group) --------
+    flat_ids = ids.reshape(G, Tl * K)                            # [G,A]
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)        # [G,A,E]
+    onehot = shard(onehot, "dp_group", None, None)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=1) - 1) * onehot, axis=-1)
+    keep = pos < C
+    slot = jnp.where(keep, flat_ids * C + pos, E * C)            # sink slot
+
+    token_idx = jnp.broadcast_to(
+        (jnp.arange(Tl * K, dtype=jnp.int32) // K)[None], (G, Tl * K))
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tl * K))
+    slot_to_token = jnp.zeros((G, E * C + 1), jnp.int32) \
+        .at[g_idx, slot].set(token_idx, mode="drop")
+    slot_weight = jnp.zeros((G, E * C + 1), jnp.float32) \
+        .at[g_idx, slot].set(gate_w.reshape(G, Tl * K), mode="drop")
+
+    # --- dispatch (gather stays within each group) -------------------------
+    gathered = jnp.take_along_axis(
+        xg, slot_to_token[:, : E * C, None], axis=1)             # [G,E*C,D]
+    gathered = shard(gathered.reshape(G, E, C, D),
+                     "dp_group", "expert", "capacity", None)
+
+    # --- expert compute (SwiGLU) -------------------------------------------
+    h1 = jnp.einsum("gecd,edf->gecf", gathered, p["we1"].astype(xg.dtype),
+                    preferred_element_type=jnp.float32)
+    h3 = jnp.einsum("gecd,edf->gecf", gathered, p["we3"].astype(xg.dtype),
+                    preferred_element_type=jnp.float32)
+    h = shard((jax.nn.silu(h1) * h3).astype(xg.dtype),
+              "dp_group", "expert", "capacity", "expert_mlp")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["we2"].astype(xg.dtype),
+                            preferred_element_type=jnp.float32)
+    expert_out = shard(expert_out, "dp_group", "expert", "capacity", None)
+
+    # --- combine (scatter-add stays within each group) ----------------------
+    weighted = (expert_out.reshape(G, E * C, D)
+                * slot_weight[:, : E * C, None]).astype(jnp.float32)
+    g_idx2 = jnp.broadcast_to(jnp.arange(G)[:, None], (G, E * C))
+    out = jnp.zeros((G, Tl, D), jnp.float32) \
+        .at[g_idx2, slot_to_token[:, : E * C]].add(weighted)
+    out = shard(out, "dp_group", None, None)
+
+    # --- load-balancing aux loss (Switch): E * sum_e f_e * P_e --------------
+    # f_e = fraction of routed assignments landing on e (sums to <= 1 with
+    # capacity drops); P_e = mean router prob. Balanced routing (both
+    # uniform) gives aux == aux_loss_weight * 1.0 exactly.
+    f_e = jnp.mean(onehot.astype(jnp.float32)
+                   * keep[..., None].astype(jnp.float32), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * E * jnp.sum(f_e * p_e)
+    return out.astype(xg.dtype), aux

@@ -1,0 +1,286 @@
+"""RecSys model zoo: FM, Wide&Deep, BERT4Rec, MIND.
+
+The memory hog is the sparse embedding tables (n_fields x 10^6 rows). JAX has
+no native EmbeddingBag — lookups are ``jnp.take`` gathers (+
+``jax.ops.segment_sum`` for multi-hot bags, see kernels/embedding_bag.py for
+the Pallas hot path). Tables are stacked [F, R, K] and row-sharded over the
+"model" axis (DLRM-style table parallelism); the gather over the sharded row
+dim lowers to the partitioned-gather + all-reduce pattern under SPMD.
+
+Every model also exposes ``user_embedding`` / item table access so the
+retrieval_cand cell routes through the paper's retrieval core
+(1 query x 1M candidates = MeMemo's own workload).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.distributed.sharding import shard
+from repro.models.common import normal_init, sigmoid_xent, softmax_xent, l2_normalize
+from repro.models import encoder as enc_lib
+
+
+# ---------------------------------------------------------------------------
+# Shared: sparse table lookup
+# ---------------------------------------------------------------------------
+def lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """table [F,R,K], ids [B,F] -> [B,F,K] (one id per field)."""
+    f = table.shape[0]
+    table = shard(table, "fields", "table_rows", "feature_dim")
+    out = table[jnp.arange(f)[None, :], ids]          # advanced-index gather
+    return shard(out, "batch", "fields", "feature_dim")
+
+
+def _mlp_init(key, dims: tuple[int, ...]) -> list[dict]:
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        layers.append({"w": normal_init(k, (a, b), (2.0 / a) ** 0.5),
+                       "b": jnp.zeros((b,))})
+    return layers
+
+
+def _mlp_apply(layers: list[dict], x: jax.Array, final_act: bool = False):
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"] + lp["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# FM — pairwise interactions via the O(nk) sum-square trick (Rendle ICDM'10)
+# ---------------------------------------------------------------------------
+def init_fm(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    F, R, K = cfg.n_sparse, cfg.rows_per_field, cfg.embed_dim
+    return {
+        "table": normal_init(k1, (F, R, K), 0.01),
+        "w_sparse": normal_init(k2, (F, R), 0.01),      # per-field linear
+        "w_dense": normal_init(k3, (cfg.n_dense, 1), 0.01),
+        "v_dense": normal_init(k4, (cfg.n_dense, K), 0.01),
+        "bias": jnp.zeros(()),
+    }
+
+
+def fm_param_axes(cfg: RecsysConfig) -> dict:
+    return {"table": ("fields", "table_rows", "feature_dim"),
+            "w_sparse": ("fields", "table_rows"),
+            "w_dense": (None, None), "v_dense": (None, "feature_dim"),
+            "bias": ()}
+
+
+def fm_forward(params: dict, cfg: RecsysConfig, sparse_ids: jax.Array,
+               dense: jax.Array) -> jax.Array:
+    """sparse_ids [B,F] int32, dense [B,n_dense] -> logits [B]."""
+    F = cfg.n_sparse
+    emb = lookup(params["table"], sparse_ids)                       # [B,F,K]
+    lin_s = params["w_sparse"][jnp.arange(F)[None, :], sparse_ids]  # [B,F]
+    lin = jnp.sum(lin_s, -1) + (dense @ params["w_dense"])[:, 0] + params["bias"]
+    # include dense features as value-scaled factors: v_i * x_i
+    vx_dense = params["v_dense"][None] * dense[..., None]           # [B,n_dense,K]
+    vx = jnp.concatenate([emb, vx_dense], axis=1)                   # [B,F+nd,K]
+    s = jnp.sum(vx, axis=1)                                         # Σ v_i x_i
+    s2 = jnp.sum(jnp.square(vx), axis=1)                            # Σ (v_i x_i)²
+    pair = 0.5 * jnp.sum(jnp.square(s) - s2, axis=-1)               # [B]
+    return lin + pair
+
+
+def fm_loss(params, cfg, sparse_ids, dense, labels):
+    return sigmoid_xent(fm_forward(params, cfg, sparse_ids, dense), labels)
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+def init_wide_deep(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    F, R, K = cfg.n_sparse, cfg.rows_per_field, cfg.embed_dim
+    mlp_dims = (F * K + cfg.n_dense,) + tuple(cfg.mlp_dims) + (1,)
+    return {
+        "table": normal_init(k1, (F, R, K), 0.01),
+        "wide": normal_init(k2, (F, R), 0.01),          # wide = linear on sparse
+        "wide_dense": normal_init(k3, (cfg.n_dense, 1), 0.01),
+        "deep": _mlp_init(k4, mlp_dims),
+        "bias": jnp.zeros(()),
+    }
+
+
+def wide_deep_param_axes(cfg: RecsysConfig) -> dict:
+    n_mlp = len(cfg.mlp_dims) + 1
+    return {"table": ("fields", "table_rows", "feature_dim"),
+            "wide": ("fields", "table_rows"),
+            "wide_dense": (None, None),
+            "deep": [{"w": (None, "mlp"), "b": ("mlp",)} if i == 0 else
+                     {"w": ("mlp", None), "b": (None,)} for i in range(n_mlp)],
+            "bias": ()}
+
+
+def wide_deep_forward(params, cfg: RecsysConfig, sparse_ids, dense):
+    B, F = sparse_ids.shape
+    emb = lookup(params["table"], sparse_ids).reshape(B, -1)        # [B,F*K]
+    deep_in = jnp.concatenate([emb, dense], axis=-1)
+    deep = _mlp_apply(params["deep"], deep_in)[:, 0]
+    wide_s = params["wide"][jnp.arange(F)[None, :], sparse_ids]
+    wide = jnp.sum(wide_s, -1) + (dense @ params["wide_dense"])[:, 0]
+    return deep + wide + params["bias"]
+
+
+def wide_deep_loss(params, cfg, sparse_ids, dense, labels):
+    return sigmoid_xent(wide_deep_forward(params, cfg, sparse_ids, dense), labels)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec — bidirectional encoder over item sequences, masked-item loss
+# ---------------------------------------------------------------------------
+def _bert4rec_enc_cfg(cfg: RecsysConfig) -> enc_lib.EncoderConfig:
+    # +mask +pad, then padded to a mesh-divisible size: an odd item vocab
+    # (60002) cannot shard over a 16/256-way axis, which silently
+    # REPLICATES the [B, M, V] logits (39 GiB/device at train_batch scale)
+    vocab = cfg.n_items + 2
+    vocab += (-vocab) % 256
+    return enc_lib.EncoderConfig(
+        vocab=vocab,
+        d_model=cfg.embed_dim,
+        n_blocks=cfg.n_blocks,
+        n_heads=cfg.n_heads,
+        d_ff=4 * cfg.embed_dim,
+        max_len=cfg.seq_len,
+        pool="none",
+    )
+
+
+def init_bert4rec(key, cfg: RecsysConfig) -> dict:
+    return {"encoder": enc_lib.init_encoder(key, _bert4rec_enc_cfg(cfg))}
+
+
+def bert4rec_param_axes(cfg: RecsysConfig) -> dict:
+    return {"encoder": enc_lib.encoder_param_axes(_bert4rec_enc_cfg(cfg))}
+
+
+def bert4rec_scores(params, cfg: RecsysConfig, item_seq: jax.Array) -> jax.Array:
+    """item_seq [B,S] -> per-position item logits [B,S,n_items+2] (tied)."""
+    ecfg = _bert4rec_enc_cfg(cfg)
+    h = enc_lib.encoder_forward(params["encoder"], ecfg, item_seq)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["encoder"]["embed"],
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def bert4rec_loss(params, cfg: RecsysConfig, item_seq, labels, label_mask):
+    """Masked-item prediction (positions with label_mask==1)."""
+    logits = bert4rec_scores(params, cfg, item_seq)
+    return softmax_xent(logits, labels, label_mask)
+
+
+def bert4rec_masked_loss(params, cfg: RecsysConfig, item_seq, masked_pos,
+                         labels) -> jax.Array:
+    """Fixed-count masked-position loss: gathers hidden states at ``M``
+    pre-chosen positions before the vocab projection, so logits are
+    [B, M, V] instead of [B, S, V] — the production-scale train path
+    (BERT-style data pipelines pre-select the masked positions anyway).
+    """
+    ecfg = _bert4rec_enc_cfg(cfg)
+    h = enc_lib.encoder_forward(params["encoder"], ecfg, item_seq)   # [B,S,D]
+    hm = jnp.take_along_axis(h, masked_pos[..., None], axis=1)       # [B,M,D]
+    logits = jnp.einsum("bmd,vd->bmv", hm, params["encoder"]["embed"],
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, "batch", None, "vocab")
+    return softmax_xent(logits, labels)
+
+
+def bert4rec_user_embedding(params, cfg: RecsysConfig, item_seq) -> jax.Array:
+    """Sequence-level user vector = last-position hidden (for retrieval)."""
+    ecfg = _bert4rec_enc_cfg(cfg)
+    h = enc_lib.encoder_forward(params["encoder"], ecfg, item_seq)
+    return l2_normalize(h[:, -1], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MIND — multi-interest extraction via B2I dynamic (capsule) routing
+# ---------------------------------------------------------------------------
+def init_mind(key, cfg: RecsysConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    K = cfg.embed_dim
+    return {
+        "items": normal_init(k1, (cfg.n_items, K), 0.02),
+        "s_matrix": normal_init(k2, (K, K), 0.02),       # bilinear routing map
+        "mlp": _mlp_init(k3, (K,) + tuple(cfg.mlp_dims) + (K,)),
+    }
+
+
+def mind_param_axes(cfg: RecsysConfig) -> dict:
+    n_mlp = len(cfg.mlp_dims) + 1
+    return {"items": ("table_rows", "feature_dim"),
+            "s_matrix": (None, None),
+            "mlp": [{"w": (None, None), "b": (None,)} for _ in range(n_mlp)]}
+
+
+def mind_interests(params, cfg: RecsysConfig, behavior: jax.Array,
+                   behavior_mask: jax.Array) -> jax.Array:
+    """behavior [B,S] item ids (+mask [B,S]) -> interests [B,I,K].
+
+    B2I dynamic routing (cfg.capsule_iters iterations): routing logits are
+    NOT backprop targets across iterations (stop_gradient, per the paper).
+    """
+    B, S = behavior.shape
+    I, K = cfg.n_interests, cfg.embed_dim
+    e = jnp.take(params["items"], behavior, axis=0)                 # [B,S,K]
+    e = shard(e, "batch", "seq", "feature_dim")
+    eh = e @ params["s_matrix"]                                      # [B,S,K]
+    mask = behavior_mask.astype(jnp.float32)
+    logits0 = jnp.zeros((B, I, S), jnp.float32)
+
+    def routing_iter(logits, _):
+        w = jax.nn.softmax(logits, axis=1)                           # over I
+        w = w * mask[:, None, :]
+        cand = jnp.einsum("bis,bsk->bik", w, jax.lax.stop_gradient(eh))
+        cap = _squash(cand)
+        upd = jnp.einsum("bik,bsk->bis", cap, jax.lax.stop_gradient(eh))
+        return logits + upd, None
+
+    logits, _ = jax.lax.scan(routing_iter, logits0,
+                             None, length=max(cfg.capsule_iters - 1, 0))
+    w = jax.nn.softmax(logits, axis=1) * mask[:, None, :]
+    caps = _squash(jnp.einsum("bis,bsk->bik", w, eh))                # grads flow
+    out = caps + _mlp_apply(params["mlp"], caps, final_act=False)
+    return l2_normalize(out, axis=-1)
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    n2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * x * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def mind_loss(params, cfg: RecsysConfig, behavior, behavior_mask, target,
+              neg_items) -> jax.Array:
+    """Label-aware attention + sampled softmax over [target; negatives]."""
+    interests = mind_interests(params, cfg, behavior, behavior_mask)  # [B,I,K]
+    tgt = jnp.take(params["items"], target, axis=0)                   # [B,K]
+    neg = jnp.take(params["items"], neg_items, axis=0)                # [B,Nneg,K]
+    # label-aware attention: pow(softmax) over interests wrt the target
+    att = jnp.einsum("bik,bk->bi", interests, tgt)
+    att = jax.nn.softmax(2.0 * att, axis=-1)
+    user = jnp.einsum("bi,bik->bk", att, interests)                   # [B,K]
+    cand = jnp.concatenate([tgt[:, None], neg], axis=1)               # [B,1+N,K]
+    logits = jnp.einsum("bk,bnk->bn", user, cand)
+    labels = jnp.zeros((behavior.shape[0],), jnp.int32)
+    return softmax_xent(logits, labels)
+
+
+def mind_user_embedding(params, cfg: RecsysConfig, behavior, behavior_mask):
+    """Max-scoring retrieval uses all interests; we export [B,I,K]."""
+    return mind_interests(params, cfg, behavior, behavior_mask)
+
+
+# ---------------------------------------------------------------------------
+# Uniform entry points used by launch/dryrun + smoke tests
+# ---------------------------------------------------------------------------
+INIT = {"fm": init_fm, "wide_deep": init_wide_deep,
+        "bert4rec": init_bert4rec, "mind": init_mind}
+AXES = {"fm": fm_param_axes, "wide_deep": wide_deep_param_axes,
+        "bert4rec": bert4rec_param_axes, "mind": mind_param_axes}

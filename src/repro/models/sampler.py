@@ -1,0 +1,37 @@
+"""Uniform fanout neighbor sampler over a CSR graph — fixed-shape, jittable.
+
+GraphSAGE's sampled-training path (minibatch_lg) requires a *real* neighbor
+sampler. CSR layout: ``row_ptr [N+1]``, ``col_idx [E]``. For each seed we draw
+``fanout`` neighbors uniformly **with replacement** (the GraphSAGE estimator
+is unbiased under with-replacement sampling and it keeps shapes static).
+Zero-degree nodes fall back to self-loops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_neighbors(key: jax.Array, row_ptr: jax.Array, col_idx: jax.Array,
+                     seeds: jax.Array, fanout: int) -> jax.Array:
+    """seeds [B] int32 -> sampled neighbor ids [B, fanout] int32."""
+    b = seeds.shape[0]
+    start = jnp.take(row_ptr, seeds)
+    deg = jnp.take(row_ptr, seeds + 1) - start                    # [B]
+    u = jax.random.uniform(key, (b, fanout))
+    offs = jnp.floor(u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    idx = jnp.clip(start[:, None] + offs, 0, col_idx.shape[0] - 1)
+    nbrs = jnp.take(col_idx, idx)                                 # [B, fanout]
+    return jnp.where(deg[:, None] > 0, nbrs, seeds[:, None])
+
+
+def make_csr(n_nodes: int, edge_src, edge_dst):
+    """Host-side CSR construction from an edge list (numpy)."""
+    import numpy as np
+    order = np.argsort(edge_src, kind="stable")
+    src = np.asarray(edge_src)[order]
+    dst = np.asarray(edge_dst)[order]
+    counts = np.bincount(src, minlength=n_nodes)
+    row_ptr = np.zeros(n_nodes + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return row_ptr, dst.astype(np.int32)

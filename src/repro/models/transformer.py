@@ -1,0 +1,449 @@
+"""Decoder-only transformer LM: GQA + RoPE + RMSNorm + SwiGLU (+ SWA, + MoE).
+
+Layer parameters are stacked along a leading L axis and the layer stack runs
+under ``jax.lax.scan`` (keeps the HLO O(1) in depth — essential for the
+single-core dry-run compiles) with optional per-layer remat.
+
+Entry points:
+  init_lm / lm_param_axes                 params + logical sharding axes
+  lm_loss(params, cfg, tokens, labels)    training loss (full or chunked vocab)
+  prefill(params, cfg, tokens)            build KV cache, return last logits
+  decode_step(params, cfg, token, cache)  one token through the cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed.sharding import shard
+from repro.models import moe as moe_lib
+from repro.models.attention import (
+    blocked_attention,
+    decode_attention,
+    swa_blocked_attention,
+)
+from repro.models.common import normal_init, rms_norm, apply_rope, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: LMConfig, dtype=jnp.float32) -> dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    H, KVH, Dh, F = cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    params: dict[str, Any] = {
+        "embed": normal_init(ks[0], (V, D), 0.02, dtype),
+        "final_norm": jnp.ones((D,), dtype),
+        "layers": {
+            "attn_norm": jnp.ones((L, D), dtype),
+            "ffn_norm": jnp.ones((L, D), dtype),
+            "wq": normal_init(ks[1], (L, D, H * Dh), 0.02, dtype),
+            "wk": normal_init(ks[2], (L, D, KVH * Dh), 0.02, dtype),
+            "wv": normal_init(ks[3], (L, D, KVH * Dh), 0.02, dtype),
+            "wo": normal_init(ks[4], (L, H * Dh, D), 0.02 / (2 * L) ** 0.5, dtype),
+        },
+    }
+    if cfg.moe is not None:
+        params["layers"].update(moe_lib.init_moe_layer(ks[5], L, D, cfg.moe))
+    else:
+        params["layers"].update({
+            "w1": normal_init(ks[6], (L, D, F), 0.02, dtype),
+            "w3": normal_init(ks[7], (L, D, F), 0.02, dtype),
+            "w2": normal_init(ks[8], (L, F, D), 0.02 / (2 * L) ** 0.5, dtype),
+        })
+    if not cfg.tie_embeddings:
+        params["out_head"] = normal_init(ks[9], (D, V), 0.02, dtype)
+    return params
+
+
+def lm_param_axes(cfg: LMConfig) -> dict:
+    """Logical sharding axes, mirroring the params tree."""
+    axes: dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": ("embed",),
+        "layers": {
+            "attn_norm": ("layers", "embed"),
+            "ffn_norm": ("layers", "embed"),
+            "wq": ("layers", "embed", "heads"),
+            "wk": ("layers", "embed", "kv_heads"),
+            "wv": ("layers", "embed", "kv_heads"),
+            "wo": ("layers", "heads", "embed"),
+        },
+    }
+    if cfg.moe is not None:
+        axes["layers"].update(moe_lib.moe_layer_axes())
+    else:
+        axes["layers"].update({
+            "w1": ("layers", "embed", "mlp"),
+            "w3": ("layers", "embed", "mlp"),
+            "w2": ("layers", "mlp", "embed"),
+        })
+    if not cfg.tie_embeddings:
+        axes["out_head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _w(lp: dict, name: str, dtype, *axes) -> jax.Array:
+    """Weight in compute dtype with its sharding pinned BEFORE use, so any
+    FSDP all-gather moves bf16 bytes, not the f32 master copy (halves the
+    dominant collective term — EXPERIMENTS.md §Perf A)."""
+    return shard(lp[name].astype(dtype), *axes)
+
+
+def _qkv(lp: dict, cfg: LMConfig, h: jax.Array, positions: jax.Array):
+    """h [B,S,D] -> q [B,S,H,Dh], k,v [B,S,KVH,Dh] with RoPE applied."""
+    B, S, D = h.shape
+    H, KVH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = jnp.einsum("bsd,dh->bsh", h, _w(lp, "wq", h.dtype, "embed", "heads"),
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    k = jnp.einsum("bsd,dh->bsh", h, _w(lp, "wk", h.dtype, "embed", "kv_heads"),
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    v = jnp.einsum("bsd,dh->bsh", h, _w(lp, "wv", h.dtype, "embed", "kv_heads"),
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    q = shard(q.reshape(B, S, H, Dh), "batch", "seq", "act_heads", None)
+    k = k.reshape(B, S, KVH, Dh)
+    v = v.reshape(B, S, KVH, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_out(lp: dict, cfg: LMConfig, attn: jax.Array) -> jax.Array:
+    B, S = attn.shape[:2]
+    out = jnp.einsum("bsh,hd->bsd", attn.reshape(B, S, -1),
+                     _w(lp, "wo", attn.dtype, "heads", "embed"),
+                     preferred_element_type=jnp.float32).astype(attn.dtype)
+    return shard(out, "batch", "seq", "act_embed")
+
+
+def _dense_ffn(lp: dict, cfg: LMConfig, h: jax.Array) -> jax.Array:
+    h1 = jnp.einsum("bsd,df->bsf", h, _w(lp, "w1", h.dtype, "embed", "mlp"),
+                    preferred_element_type=jnp.float32)
+    h3 = jnp.einsum("bsd,df->bsf", h, _w(lp, "w3", h.dtype, "embed", "mlp"),
+                    preferred_element_type=jnp.float32)
+    g = shard((jax.nn.silu(h1) * h3).astype(h.dtype), "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", g, _w(lp, "w2", h.dtype, "mlp", "embed"),
+                     preferred_element_type=jnp.float32).astype(h.dtype)
+    return shard(out, "batch", "seq", "act_embed")
+
+
+def _ffn(lp: dict, cfg: LMConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        B, S, D = h.shape
+        out, aux = moe_lib.moe_ffn(
+            {k: lp[k] for k in ("router", "we1", "we2", "we3")},
+            cfg.moe, h.reshape(B * S, D))
+        return x + out.reshape(B, S, D), aux
+    return x + _dense_ffn(lp, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def _train_layer(cfg: LMConfig, impl: str, x: jax.Array, lp: dict):
+    """One decoder layer on a full sequence (no cache)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(lp, cfg, h, positions)
+    if cfg.sliding_window is not None:
+        attn = swa_blocked_attention(q, k, v, window=cfg.sliding_window,
+                                     block_q=cfg.attn_block_q,
+                                     block_k=cfg.attn_block_q)
+    else:
+        attn = blocked_attention(q, k, v, causal=True, impl=impl,
+                                 block_q=cfg.attn_block_q,
+                                 block_k=cfg.attn_block_k)
+    x = x + _attn_out(lp, cfg, attn)
+    x, aux = _ffn(lp, cfg, x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward / loss
+# ---------------------------------------------------------------------------
+def _embed(params: dict, cfg: LMConfig, tokens: jax.Array, dtype) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def _head(params: dict, cfg: LMConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = shard(params["embed"].astype(x.dtype), "vocab", "embed").T
+    else:
+        w = shard(params["out_head"].astype(x.dtype), "embed", "vocab")
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cast_params_for_compute(params: dict, cfg: LMConfig, dtype) -> dict:
+    """One sharding-pinned cast of the whole parameter tree to the compute
+    dtype at step entry: every downstream FSDP all-gather then moves bf16
+    bytes instead of the f32 master copy (halves weight-gather traffic)."""
+    if params["embed"].dtype == dtype:
+        return params
+    axes = lm_param_axes(cfg)
+
+    def cast(p, a):
+        return shard(p.astype(dtype), *a)
+
+    return jax.tree.map(cast, params, axes,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(y, (str, type(None))) for y in x))
+
+
+def forward_hidden(params: dict, cfg: LMConfig, tokens: jax.Array,
+                   dtype=jnp.bfloat16, impl: str = "masked"):
+    """Token ids [B,S] -> final hidden states [B,S,D], plus MoE aux loss."""
+    params = cast_params_for_compute(params, cfg, dtype)
+    x = _embed(params, cfg, tokens, dtype)
+    body = functools.partial(_train_layer, cfg, impl)
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    def scan_fn(carry, lp):
+        x, aux = carry
+        x, a = body(x, lp)
+        return (x, aux + a), None
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, a = body(x, lp)
+            aux = aux + a
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens: jax.Array, labels: jax.Array,
+            dtype=jnp.bfloat16, impl: str = "masked") -> jax.Array:
+    """Causal LM loss. ``cfg.chunked_loss``>0 scans the vocab projection over
+    sequence chunks under remat — never materialises [B,S,V] logits."""
+    params = cast_params_for_compute(params, cfg, dtype)
+    x, aux = forward_hidden(params, cfg, tokens, dtype, impl)
+    if cfg.chunked_loss <= 0:
+        logits = _head(params, cfg, x)
+        return softmax_xent(logits, labels) + aux
+
+    B, S, D = x.shape
+    cs = min(cfg.chunked_loss, S)
+    assert S % cs == 0
+    if cfg.tie_embeddings:
+        w = shard(params["embed"].astype(x.dtype), "vocab", "embed").T
+    else:
+        w = shard(params["out_head"].astype(x.dtype), "embed", "vocab")
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_nll(x_c, y_c):
+        logits = jnp.einsum("bsd,dv->bsv", x_c, w,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - ll)
+
+    def step(tot, i):
+        x_c = jax.lax.dynamic_slice_in_dim(x, i * cs, cs, axis=1)
+        y_c = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+        return tot + chunk_nll(x_c, y_c), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), jnp.arange(S // cs))
+    return tot / (B * S) + aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """Stacked-layer KV cache. k/v: [L, B, S_cache, KVH, Dh].
+
+    ``cur_len`` is PER-SEQUENCE [B]: every serving slot carries its own
+    position (continuous batching admits/retires slots independently).
+    With ``cfg.kv_quant`` the payloads are int8 and ``k_scale``/``v_scale``
+    hold per-(layer, seq, position, head) f32 scales — halves decode HBM
+    traffic + doubles servable context per chip (EXPERIMENTS.md §Perf).
+    """
+    k: jax.Array
+    v: jax.Array
+    cur_len: jax.Array
+    k_scale: jax.Array | None = None
+    v_scale: jax.Array | None = None
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.cur_len, self.k_scale, self.v_scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _quantize_kv(x: jax.Array):
+    """x [..., Dh] -> (int8 payload, f32 scale[...])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, KVCache.tree_flatten, KVCache.tree_unflatten)
+
+
+def cache_len(cfg: LMConfig, seq_len: int) -> int:
+    """SWA archs keep a ring buffer of the window; full attention keeps S."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: LMConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    L, KVH, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    S = cache_len(cfg, seq_len)
+    shape = (L, batch, S, KVH, Dh)
+    pay_dtype = jnp.int8 if cfg.kv_quant else dtype
+    k = shard(jnp.zeros(shape, pay_dtype), None, "batch", "kv_seq", None, None)
+    v = shard(jnp.zeros(shape, pay_dtype), None, "batch", "kv_seq", None, None)
+    scale = None
+    if cfg.kv_quant:
+        scale = shard(jnp.zeros(shape[:-1], jnp.float32),
+                      None, "batch", "kv_seq", None)
+    return KVCache(k=k, v=v, cur_len=jnp.zeros((batch,), jnp.int32),
+                   k_scale=scale, v_scale=scale)
+
+
+def prefill(params: dict, cfg: LMConfig, tokens: jax.Array,
+            dtype=jnp.bfloat16, max_len: int | None = None,
+            prompt_lens: jax.Array | None = None
+            ) -> tuple[jax.Array, KVCache]:
+    """Run the prompt, build a cache with capacity ``max_len``, return the
+    last-valid-position logits. ``max_len`` defaults to the prompt length
+    (dry-run semantics); generation should pass prompt + budget.
+    ``prompt_lens`` [B] supports right-padded batched prompts: logits come
+    from position ``len-1`` and the cache length is per-sequence."""
+    B, S = tokens.shape
+    Sc = cache_len(cfg, max_len or S)
+    x = _embed(params, cfg, tokens, dtype)
+    positions = jnp.arange(S)[None, :]
+
+    def layer_fn(carry, lp):
+        x, li = carry
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(lp, cfg, h, positions)
+        if cfg.sliding_window is not None:
+            attn = swa_blocked_attention(q, k, v, window=cfg.sliding_window,
+                                         block_q=cfg.attn_block_q,
+                                         block_k=cfg.attn_block_q)
+        else:
+            attn = blocked_attention(q, k, v, causal=True,
+                                     block_q=cfg.attn_block_q,
+                                     block_k=cfg.attn_block_k)
+        x = x + _attn_out(lp, cfg, attn)
+        x, _ = _ffn(lp, cfg, x)
+        # cache layout invariant: position p lives at slot p % Sc (ring).
+        if Sc < S:       # SWA ring smaller than the prompt: keep last Sc
+            k_keep = jnp.roll(k[:, S - Sc:], S % Sc, axis=1)
+            v_keep = jnp.roll(v[:, S - Sc:], S % Sc, axis=1)
+        elif Sc > S:     # room to grow: pad to capacity
+            pad = [(0, 0), (0, Sc - S), (0, 0), (0, 0)]
+            k_keep, v_keep = jnp.pad(k, pad), jnp.pad(v, pad)
+        else:
+            k_keep, v_keep = k, v
+        if cfg.kv_quant:
+            kq, ks = _quantize_kv(k_keep)
+            vq, vs = _quantize_kv(v_keep)
+            return (x, li + 1), ((kq, ks), (vq, vs))
+        return (x, li + 1), ((k_keep, None), (v_keep, None))
+
+    (x, _), ((k_all, ks_all), (v_all, vs_all)) = jax.lax.scan(
+        layer_fn, (x, jnp.zeros((), jnp.int32)), params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if prompt_lens is None:
+        logits = _head(params, cfg, x[:, -1:, :])
+        lens = jnp.full((B,), S, jnp.int32)
+    else:
+        lens = jnp.asarray(prompt_lens, jnp.int32)
+        idx = jnp.clip(lens - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # [B,1,D]
+        logits = _head(params, cfg, x_last)
+    k_all = shard(k_all, None, "batch", "kv_seq", None, None)
+    v_all = shard(v_all, None, "batch", "kv_seq", None, None)
+    cache = KVCache(k=k_all, v=v_all, cur_len=lens,
+                    k_scale=ks_all, v_scale=vs_all)
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: LMConfig, token: jax.Array,
+                cache: KVCache, dtype=jnp.bfloat16
+                ) -> tuple[jax.Array, KVCache]:
+    """token [B,1] int32 -> (logits [B,1,V], updated cache). One new token
+    per sequence; every slot advances its own ``cur_len`` (continuous
+    batching)."""
+    B = token.shape[0]
+    Sc = cache.k.shape[2]
+    x = _embed(params, cfg, token, dtype)
+    pos = jnp.broadcast_to(jnp.asarray(cache.cur_len, jnp.int32), (B,))
+    write_idx = pos % Sc    # ring invariant; full-attn caches sized >= max pos
+    positions = pos[:, None]
+    b_idx = jnp.arange(B)
+
+    def layer_fn(carry, lp):
+        x, kc, vc, ksc, vsc, li = carry
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _qkv(lp, cfg, h, positions)     # k_new [B,1,KVH,Dh]
+        k_l = jax.lax.dynamic_index_in_dim(kc, li, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vc, li, 0, keepdims=False)
+        if cfg.kv_quant:
+            kq, ks = _quantize_kv(k_new[:, 0])
+            vq, vs = _quantize_kv(v_new[:, 0])
+            k_l = k_l.at[b_idx, write_idx].set(kq)
+            v_l = v_l.at[b_idx, write_idx].set(vq)
+            ks_l = jax.lax.dynamic_index_in_dim(ksc, li, 0, keepdims=False)
+            vs_l = jax.lax.dynamic_index_in_dim(vsc, li, 0, keepdims=False)
+            ks_l = ks_l.at[b_idx, write_idx].set(ks)
+            vs_l = vs_l.at[b_idx, write_idx].set(vs)
+            ksc = jax.lax.dynamic_update_index_in_dim(ksc, ks_l, li, 0)
+            vsc = jax.lax.dynamic_update_index_in_dim(vsc, vs_l, li, 0)
+            k_att = _dequantize_kv(k_l, ks_l, x.dtype)
+            v_att = _dequantize_kv(v_l, vs_l, x.dtype)
+        else:
+            k_l = k_l.at[b_idx, write_idx].set(k_new[:, 0].astype(kc.dtype))
+            v_l = v_l.at[b_idx, write_idx].set(v_new[:, 0].astype(vc.dtype))
+            k_att, v_att = k_l, v_l
+        kc = jax.lax.dynamic_update_index_in_dim(kc, k_l, li, 0)
+        vc = jax.lax.dynamic_update_index_in_dim(vc, v_l, li, 0)
+        n_valid = jnp.minimum(pos + 1, Sc)
+        attn = decode_attention(q, k_att, v_att, n_valid)
+        x = x + _attn_out(lp, cfg, attn)
+        x, _ = _ffn(lp, cfg, x)
+        return (x, kc, vc, ksc, vsc, li + 1), None
+
+    zero_s = jnp.zeros((), jnp.int32)
+    ksc0 = cache.k_scale if cache.k_scale is not None else zero_s
+    vsc0 = cache.v_scale if cache.v_scale is not None else zero_s
+    (x, kc, vc, ksc, vsc, _), _ = jax.lax.scan(
+        layer_fn, (x, cache.k, cache.v, ksc0, vsc0, zero_s),
+        params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, cfg, x)
+    return logits, KVCache(
+        k=kc, v=vc, cur_len=pos + 1,
+        k_scale=ksc if cfg.kv_quant else None,
+        v_scale=vsc if cfg.kv_quant else None)

@@ -1,0 +1,136 @@
+"""KV-cache serving engine with slot-based continuous batching.
+
+A fixed pool of B slots decodes in lock step (one jitted ``decode_step`` per
+engine tick serves every active slot); requests join free slots after a
+batched prefill and leave on EOS/max-tokens, at which point queued requests
+are admitted — vLLM-style continuous batching restricted to fixed shapes
+(TPU-friendly: no recompilation as load changes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: LMConfig, *, slots: int = 4,
+                 max_len: int = 256, dtype=jnp.float32,
+                 sampler: str = "greedy", seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.sampler = sampler
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self._next_rid = 0
+        self.cache = tf.init_cache(cfg, slots, max_len, dtype)
+        self._decode = jax.jit(
+            lambda p, t, c: tf.decode_step(p, cfg, t, c, dtype=dtype))
+        self._prefill = jax.jit(
+            lambda p, t, lens: tf.prefill(p, cfg, t, dtype=dtype,
+                                          max_len=max_len, prompt_lens=lens))
+        self.ticks = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, prompt_ids, max_new_tokens: int = 16,
+               eos_id: int | None = None) -> Request:
+        r = Request(self._next_rid, np.asarray(prompt_ids, np.int32),
+                    max_new_tokens, eos_id)
+        self._next_rid += 1
+        self.queue.append(r)
+        return r
+
+    def _admit(self):
+        """Fill free slots: batched prefill of up to `slots` queued prompts."""
+        free = [i for i, a in enumerate(self.active) if a is None]
+        if not free or not self.queue:
+            return
+        take = [self.queue.popleft() for _ in range(min(len(free), len(self.queue)))]
+        # right-pad to a common length; per-request prompt_lens mask the pads
+        plen = max(len(r.prompt) for r in take)
+        batch = np.zeros((len(take), plen), np.int32)
+        lens = np.zeros(len(take), np.int32)
+        for j, r in enumerate(take):
+            batch[j, : len(r.prompt)] = r.prompt
+            lens[j] = len(r.prompt)
+        logits, cache = self._prefill(self.params, jnp.asarray(batch),
+                                      jnp.asarray(lens))
+        first = np.asarray(jnp.argmax(logits[:, 0], -1))
+        k, v, cur = self.cache.k, self.cache.v, self.cache.cur_len
+        ks, vs = self.cache.k_scale, self.cache.v_scale
+        span = cache.k.shape[2]
+        for j, r in enumerate(take):
+            slot = free[j]
+            self.active[slot] = r
+            r.out_tokens.append(int(first[j]))
+            # copy this request's prefilled KV rows into its slot
+            k = k.at[:, slot, :span].set(cache.k[:, j])
+            v = v.at[:, slot, :span].set(cache.v[:, j])
+            if ks is not None:
+                ks = ks.at[:, slot, :span].set(cache.k_scale[:, j])
+                vs = vs.at[:, slot, :span].set(cache.v_scale[:, j])
+            cur = cur.at[slot].set(int(lens[j]))
+        self.cache = tf.KVCache(k=k, v=v, cur_len=cur, k_scale=ks, v_scale=vs)
+
+    # ------------------------------------------------------------- tick
+    def step(self):
+        """One engine tick: admit, decode one token for every active slot."""
+        self._admit()
+        if not any(a is not None for a in self.active):
+            return
+        last = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None and r.out_tokens:
+                last[i, 0] = r.out_tokens[-1]
+        logits, self.cache = self._decode(self.params, jnp.asarray(last),
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        cur = np.asarray(self.cache.cur_len)
+        self.ticks += 1
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            self.tokens_out += 1
+            if (r.eos_id is not None and tok == r.eos_id) \
+                    or len(r.out_tokens) >= r.max_new_tokens \
+                    or cur[i] >= self.max_len - 1:
+                r.done = True
+                self.active[i] = None
+                # park the slot at position 0 (keeps idle decodes in-bounds;
+                # re-admission overwrites + re-masks the rows)
+                self.cache = dataclasses.replace(
+                    self.cache, cur_len=self.cache.cur_len.at[i].set(0))
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        while (self.queue or any(a is not None for a in self.active)) \
+                and self.ticks < max_ticks:
+            self.step()
+
+    def generate(self, prompts: list, max_new_tokens: int = 16) -> list[list[int]]:
+        reqs = [self.submit(p, max_new_tokens) for p in prompts]
+        self.run_until_drained()
+        return [r.out_tokens for r in reqs]

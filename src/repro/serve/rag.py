@@ -1,0 +1,90 @@
+"""RAG pipeline — the paper's end-to-end loop (C4, §2 RAG Playground):
+
+    encode(query) -> k-NN retrieve (HNSW, on-device) -> fill the
+    {{user}}/{{context}} prompt template -> generate with the LM.
+
+Everything stays on the "device" (this process / the pod): no external
+retrieval service — the privacy property the paper is about.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.interface import HNSW
+from repro.data.corpus import DocumentStore, HashingEncoder, encode_ids
+
+DEFAULT_TEMPLATE = (
+    "You are a helpful assistant. Use the context to answer.\n"
+    "Context:\n{{context}}\n"
+    "Question: {{user}}\n"
+    "Answer:"
+)
+
+
+@dataclasses.dataclass
+class RetrievedDoc:
+    key: str
+    text: str
+    distance: float
+
+
+class RAGPipeline:
+    def __init__(self, *, encoder: HashingEncoder | None = None,
+                 index: HNSW | None = None,
+                 store: DocumentStore | None = None,
+                 template: str = DEFAULT_TEMPLATE,
+                 generate_fn: Callable[[str], str] | None = None,
+                 M: int = 16, ef_construction: int = 100):
+        self.encoder = encoder or HashingEncoder()
+        self.index = index or HNSW(distance_function="cosine", M=M,
+                                   ef_construction=ef_construction)
+        self.store = store or DocumentStore()
+        self.template = template
+        self.generate_fn = generate_fn
+
+    # --------------------------------------------------------------- data
+    def add_documents(self, docs: list[tuple[str, str]]):
+        """docs: [(key, text)] — embed + index + store (bulk write, C3)."""
+        keys = [k for k, _ in docs]
+        texts = [t for _, t in docs]
+        vecs = self.encoder.encode(texts)
+        self.index.bulk_insert(keys, vecs)
+        for k, t in docs:
+            self.store.add(k, t)
+
+    # ------------------------------------------------------------ retrieve
+    def retrieve(self, query: str, k: int = 3) -> list[RetrievedDoc]:
+        qv = self.encoder.encode(query)[0]
+        keys, dists = self.index.query(qv, k=min(k, self.index.size))
+        return [RetrievedDoc(key, self.store.get(key).text, float(d))
+                for key, d in zip(keys, dists) if key is not None]
+
+    # ------------------------------------------------------------- prompt
+    def build_prompt(self, query: str, docs: list[RetrievedDoc]) -> str:
+        ctx = "\n".join(f"[{i+1}] {d.text}" for i, d in enumerate(docs))
+        return (self.template
+                .replace("{{context}}", ctx)
+                .replace("{{user}}", query))
+
+    # ------------------------------------------------------------ generate
+    def answer(self, query: str, k: int = 3) -> dict:
+        docs = self.retrieve(query, k)
+        prompt = self.build_prompt(query, docs)
+        out = self.generate_fn(prompt) if self.generate_fn else None
+        return {"query": query, "docs": docs, "prompt": prompt,
+                "response": out}
+
+
+def lm_generate_fn(engine, vocab: int, max_len: int, detokenize=None):
+    """Adapt a ServeEngine into RAGPipeline.generate_fn (hashed tokenizer)."""
+    def fn(prompt: str) -> str:
+        ids = encode_ids(prompt, vocab, max_len)
+        ids = ids[ids > 0]
+        out = engine.generate([ids], max_new_tokens=16)[0]
+        if detokenize:
+            return detokenize(out)
+        return " ".join(f"<{t}>" for t in out)
+    return fn

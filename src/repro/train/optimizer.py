@@ -1,0 +1,116 @@
+"""Pure-JAX optimizer library (no optax): AdamW + Adafactor-style second
+moment option, global-norm clipping, LR schedules, ZeRO-1 state sharding.
+
+State layout mirrors the param pytree: {"m": tree, "v": tree, "step": int}.
+ZeRO-1: optimizer-state logical axes reuse the param axes with "layers"
+remapped to the "zero" rule (-> data axis), so m/v shard across data
+parallel ranks on top of the params' model-parallel sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree, tree_norm
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+class OptState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jax.Array
+
+
+def adamw_init(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    g_norm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g_norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), g_norm
+
+
+def adamw_update(cfg: AdamWConfig, params: PyTree, grads: PyTree,
+                 state: OptState) -> tuple[PyTree, OptState, dict]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, g_norm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        g_norm = tree_norm(grads)
+    step = state.step + 1
+    lr = cfg.lr_at(step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:       # no decay on norms/bias
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": g_norm, "lr": lr}
+
+
+def opt_state_axes(param_axes: PyTree) -> Any:
+    """Logical axes for (m, v): param axes with 'layers' -> 'zero' (ZeRO-1:
+    the stacked-layer dim shards across the data axis)."""
+    def remap(axes):
+        return tuple("zero" if a == "layers" else a for a in axes)
+    mapped = jax.tree.map(
+        remap, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x))
+    return OptState(m=mapped, v=mapped, step=())

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS / device-count overrides here —
+smoke tests must see the single real CPU device (multi-device tests spawn
+subprocesses; see test_distributed.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_finite(tree):
+    import jax
+    for leaf in jax.tree.leaves(tree):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float64))), \
+            "non-finite values"

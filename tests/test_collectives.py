@@ -1,0 +1,52 @@
+"""Properties of the collective building blocks (single-device math)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+
+@given(n_shards=st.integers(2, 6), per=st.integers(3, 20),
+       k=st.integers(1, 8), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_hierarchical_merge_equals_global_topk(n_shards, per, k, seed):
+    """Merging per-shard top-k (k <= per) must equal the global top-k —
+    the invariant behind core/distributed.sharded_flat_topk."""
+    k = min(k, per)
+    rng = np.random.default_rng(seed)
+    # unique distances avoid tie-ordering ambiguity
+    d = rng.permutation(n_shards * per).astype(np.float32).reshape(n_shards,
+                                                                   per)
+    ids = np.arange(n_shards * per).reshape(n_shards, per)
+    # per-shard top-k (smallest distances)
+    local = [(np.sort(d[s])[:k],
+              ids[s][np.argsort(d[s])[:k]]) for s in range(n_shards)]
+    cand_d = np.concatenate([x[0] for x in local])
+    cand_i = np.concatenate([x[1] for x in local])
+    order = np.argsort(cand_d)[:k]
+    merged_i = set(cand_i[order])
+    true_i = set(np.argsort(d.reshape(-1))[:k])
+    assert merged_i == true_i
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_int8_roundtrip_error_bound(seed):
+    """compressed_psum's quantiser: |dequant(quant(x)) - x| <= max|x|/127."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=512).astype(np.float32) * rng.uniform(0.1, 10)
+    scale = np.abs(x).max() / 127.0 + 1e-20
+    q = np.clip(np.round(x / scale), -127, 127)
+    err = np.abs(q * scale - x).max()
+    assert err <= np.abs(x).max() / 127.0 + 1e-6
+
+
+def test_bf16_wire_preserves_order_to_resolution():
+    """Sorting by bf16-rounded keys only swaps entries whose distances are
+    within bf16 resolution of each other (the wire_bf16 guarantee)."""
+    rng = np.random.default_rng(0)
+    d = np.sort(rng.uniform(0, 2, 64).astype(np.float32))
+    d16 = np.asarray(jnp.asarray(d).astype(jnp.bfloat16).astype(jnp.float32))
+    order = np.argsort(d16, kind="stable")
+    # any inversion must involve values closer than bf16 eps at that scale
+    for i, j in enumerate(order):
+        if i != j:
+            assert abs(d[i] - d[j]) <= 0.01 * max(d[i], 1e-3)

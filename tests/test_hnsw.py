@@ -1,0 +1,92 @@
+"""HNSW builders + lock-step JAX search: recall, parity, properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hnsw, hnsw_build
+from repro.data.synthetic import make_corpus
+from repro.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def built():
+    data = make_corpus(1000, 24, seed=0)
+    g = hnsw_build.build_sequential(data, M=8, ef_construction=60)
+    dg = hnsw.to_device_graph(g)
+    queries = make_corpus(32, 24, seed=1)
+    qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+    _, true_i = ref.distance_topk_ref(jnp.asarray(g.vectors), jnp.asarray(qn),
+                                      10, metric="cosine")
+    return g, dg, queries, np.asarray(true_i)
+
+
+def test_sequential_recall(built):
+    g, dg, queries, true_i = built
+    ids, _ = hnsw.search_graph(dg, queries, k=10, ef=64)
+    assert hnsw.recall_at_k(np.asarray(ids), true_i) >= 0.85
+
+
+def test_recall_increases_with_ef(built):
+    g, dg, queries, true_i = built
+    recalls = []
+    for ef in (16, 64, 160):
+        ids, _ = hnsw.search_graph(dg, queries, k=10, ef=ef)
+        recalls.append(hnsw.recall_at_k(np.asarray(ids), true_i))
+    assert recalls[0] <= recalls[1] <= recalls[2] + 0.02
+    assert recalls[2] >= 0.9
+
+
+def test_distances_sorted_and_consistent(built):
+    g, dg, queries, _ = built
+    ids, dists = hnsw.search_graph(dg, queries, k=10, ef=64)
+    d = np.asarray(dists)
+    assert (np.diff(d, axis=1) >= -1e-6).all(), "distances must ascend"
+    # reported distance matches recomputed cosine distance
+    qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+    for b in range(4):
+        for j in range(10):
+            i = int(ids[b, j])
+            expect = 1.0 - float(qn[b] @ g.vectors[i])
+            assert abs(expect - float(d[b, j])) < 1e-4
+
+
+def test_bulk_build_recall_parity():
+    data = make_corpus(800, 16, seed=2)
+    queries = make_corpus(24, 16, seed=3)
+    qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+    g_seq = hnsw_build.build_sequential(data, M=8, ef_construction=50)
+    g_blk = hnsw_build.bulk_build(data, M=8, ef_construction=50,
+                                  bootstrap=100, batch_size=200)
+    _, true_i = ref.distance_topk_ref(
+        jnp.asarray(g_seq.vectors), jnp.asarray(qn), 10, metric="cosine")
+    r_seq = hnsw.recall_at_k(
+        np.asarray(hnsw.search_graph(hnsw.to_device_graph(g_seq), queries,
+                                     k=10, ef=64)[0]), np.asarray(true_i))
+    r_blk = hnsw.recall_at_k(
+        np.asarray(hnsw.search_graph(hnsw.to_device_graph(g_blk), queries,
+                                     k=10, ef=64)[0]), np.asarray(true_i))
+    assert r_blk >= r_seq - 0.1, (r_blk, r_seq)
+
+
+def test_graph_structure_invariants(built):
+    g, *_ = built
+    m2 = g.neighbors0.shape[1]
+    assert m2 == 2 * 8
+    # no self-loops, ids in range
+    for i in range(0, g.n, 97):
+        nbrs = g.neighbors0[i][g.neighbors0[i] >= 0]
+        assert (nbrs != i).all()
+        assert (nbrs < g.n).all()
+    # entry has the max level
+    assert g.levels[g.entry] == g.max_level
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_db_row_query_returns_itself(seed, built):
+    g, dg, *_ = built
+    rng = np.random.default_rng(seed)
+    i = int(rng.integers(0, g.n))
+    ids, dists = hnsw.search_graph(dg, g.vectors[i], k=1, ef=48)
+    assert float(dists[0, 0]) < 1e-5

@@ -1,0 +1,96 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.distance_topk import distance_topk_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.gather_distance import gather_distance_pallas
+
+
+@pytest.mark.parametrize("n,d,b,k,dtype", [
+    (128, 32, 8, 6, jnp.float32),
+    (256, 64, 16, 10, jnp.float32),
+    (64, 16, 4, 3, jnp.bfloat16),
+    (512, 128, 8, 16, jnp.float32),
+])
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_gather_distance(n, d, b, k, dtype, metric):
+    db = jax.random.normal(jax.random.PRNGKey(0), (n, d), dtype)
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, d), dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(2), (b, k), 0, n)
+    out = gather_distance_pallas(db, q, ids, metric=metric, interpret=True)
+    exp = ref.gather_distance_ref(db, q, ids, metric=metric)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d,b,k,bq,bn", [
+    (256, 32, 8, 5, 8, 64),
+    (512, 64, 16, 10, 8, 128),
+    (100, 16, 4, 4, 4, 25),       # non-pow2 tiling
+])
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_distance_topk(n, d, b, k, bq, bn, metric):
+    db = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, d))
+    pd, pi = distance_topk_pallas(db, q, k, metric=metric, block_q=bq,
+                                  block_n=bn, interpret=True)
+    neg, j = jax.lax.top_k(-pd, k)
+    got_d = -neg
+    got_i = jnp.take_along_axis(pi, j, axis=1)
+    exp_d, exp_i = ref.distance_topk_ref(db, q, k, metric=metric)
+    np.testing.assert_allclose(np.sort(np.asarray(got_d)),
+                               np.sort(np.asarray(exp_d)),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.sort(np.asarray(got_i)) == np.sort(np.asarray(exp_i))).all()
+
+
+@pytest.mark.parametrize("r,e,b,l,dtype", [
+    (100, 32, 12, 6, jnp.float32),
+    (1000, 64, 8, 4, jnp.float32),
+    (50, 16, 6, 3, jnp.bfloat16),
+])
+@pytest.mark.parametrize("combine", ["sum", "mean"])
+def test_embedding_bag(r, e, b, l, dtype, combine):
+    table = jax.random.normal(jax.random.PRNGKey(0), (r, e), dtype)
+    ids = jax.random.randint(jax.random.PRNGKey(1), (b, l), 0, r)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (b, l))
+    out = embedding_bag_pallas(table, ids, w, combine=combine, interpret=True)
+    exp = ref.embedding_bag_ref(table, ids, w, combine=combine)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,h,kvh,dh,s,bs,cur", [
+    (2, 8, 2, 32, 128, 32, 100),
+    (3, 4, 4, 16, 64, 16, 64),    # MHA
+    (1, 8, 1, 64, 256, 64, 7),    # MQA, short valid prefix
+])
+def test_flash_decode(b, h, kvh, dh, s, bs, cur):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, dh))
+    out = flash_decode_pallas(q, k, v, jnp.asarray(cur), block_s=bs,
+                              interpret=True)
+    exp = ref.flash_decode_ref(q, k, v, jnp.asarray(cur))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_matches_ref(monkeypatch):
+    """ops.* under REPRO_PALLAS=interpret must equal REPRO_PALLAS=off."""
+    from repro.kernels import ops
+    db = jax.random.normal(jax.random.PRNGKey(0), (128, 32))
+    q = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    monkeypatch.setenv("REPRO_PALLAS", "off")
+    d0, i0 = ops.flat_topk(db, q, 5)
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    d1, i1 = ops.flat_topk(db, q, 5)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5)
+    assert (np.asarray(i0) == np.asarray(i1)).all()

@@ -1,0 +1,158 @@
+"""Interface parity, tiered store, HLO analyzer, data pipeline, costs."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.interface import HNSW
+from repro.core.tiered import TieredVectorStore, auto_prefetch_p
+from repro.data import synthetic
+from repro.data.corpus import HashingEncoder, encode_ids
+
+
+# ---------------------------------------------------------------------------
+# Code-1 API parity
+# ---------------------------------------------------------------------------
+def test_code1_api_parity():
+    """The exact call sequence of the paper's Code 1."""
+    values = synthetic.make_corpus(300, 16, seed=0)
+    keys = [f"k{i}" for i in range(300)]
+    index = HNSW(distance_function="cosine")        # defaults like the TS lib
+    index.bulkInsert(keys, values)                  # camelCase alias
+    found, distances = index.query(values[7], 5)
+    assert found[0] == "k7"
+    assert len(found) == len(distances) == 5
+
+
+def test_incremental_insert_then_query():
+    idx = HNSW(distance_function="l2", M=8, ef_construction=40)
+    rng = np.random.default_rng(0)
+    for i in range(64):
+        idx.insert(f"v{i}", rng.normal(size=8))
+    assert idx.size == 64
+    keys, _ = idx.query(np.zeros(8), k=3)
+    assert len(keys) == 3
+
+
+def test_export_load_roundtrip():
+    values = synthetic.make_corpus(200, 12, seed=1)
+    idx = HNSW(distance_function="cosine", M=6, ef_construction=30)
+    idx.bulk_insert([f"d{i}" for i in range(200)], values)
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "idx.npz")
+        idx.export_index(p)
+        idx2 = HNSW.load_index(p)
+        k1, d1 = idx.query(values[3], k=5)
+        k2, d2 = idx2.query(values[3], k=5)
+        assert k1 == k2
+        np.testing.assert_allclose(d1, d2, rtol=1e-6)
+
+
+def test_bad_metric_rejected():
+    with pytest.raises(ValueError):
+        HNSW(distance_function="manhattan")
+
+
+# ---------------------------------------------------------------------------
+# tiered store mechanics
+# ---------------------------------------------------------------------------
+def test_tiered_lru_eviction_and_counters():
+    data = np.arange(40, dtype=np.float32).reshape(10, 4)
+    st = TieredVectorStore(data, cache_rows=4, prefetch_p=1)
+    st.read([0, 1, 2, 3])
+    assert st.stats.misses == 4 and st.stats.hits == 0
+    st.read([0])
+    assert st.stats.hits == 1
+    st.read([4, 5])                      # evicts 1, 2 (LRU; 0 was touched)
+    assert st.stats.evictions == 2
+    got = st.read([7])
+    np.testing.assert_array_equal(got[0], data[7])
+
+
+def test_auto_prefetch_matches_paper_scaling():
+    """p scales inversely with dim (paper: auto from vector dimension)."""
+    assert auto_prefetch_p(384) < auto_prefetch_p(64)
+    assert auto_prefetch_p(384) >= 1
+
+
+# ---------------------------------------------------------------------------
+# hashing encoder / tokenizer
+# ---------------------------------------------------------------------------
+def test_hashing_encoder_deterministic_and_normalised():
+    enc = HashingEncoder(dim=64)
+    v1 = enc.encode("hello world retrieval")
+    v2 = enc.encode("hello world retrieval")
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_allclose(np.linalg.norm(v1[0]), 1.0, atol=1e-5)
+    # related text closer than unrelated
+    a = enc.encode(["dense retrieval with graphs",
+                    "graph based dense retrieval",
+                    "cooking pasta with tomatoes"])
+    assert a[0] @ a[1] > a[0] @ a[2]
+
+
+def test_encode_ids_fixed_shape():
+    ids = encode_ids("a b c", vocab=100, max_len=8)
+    assert ids.shape == (8,) and ids.dtype == np.int32
+    assert (ids[3:] == 0).all() and (ids[:3] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer: scan-trip correction on a real compiled program
+# ---------------------------------------------------------------------------
+def test_hlo_analyzer_counts_scan_trips():
+    from repro.launch.hlo_analysis import analyze
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=5)
+        return out.sum()
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    an = analyze(txt)
+    dot_flops = 2 * 8 * 16 * 16
+    assert an["flops"] >= 5 * dot_flops          # 5 trips counted
+    assert an["flops"] < 12 * dot_flops
+
+
+def test_hlo_analyzer_scan_equals_unroll():
+    from repro.launch.hlo_analysis import analyze
+
+    def scan_f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=4)[0].sum()
+
+    def unroll_f(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    w = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    a = analyze(jax.jit(scan_f).lower(x, w).compile().as_text())
+    b = analyze(jax.jit(unroll_f).lower(x, w).compile().as_text())
+    assert abs(a["flops"] - b["flops"]) / b["flops"] < 0.25
+
+
+# ---------------------------------------------------------------------------
+# synthetic data
+# ---------------------------------------------------------------------------
+def test_ctr_batches_deterministic():
+    a = next(synthetic.ctr_batches(5, 100, 3, 16, seed=1, start_step=2))
+    b = next(synthetic.ctr_batches(5, 100, 3, 16, seed=1, start_step=2))
+    np.testing.assert_array_equal(a["sparse_ids"], b["sparse_ids"])
+    assert set(np.unique(a["labels"])) <= {0, 1}
+
+
+def test_make_graph_homophily():
+    g = synthetic.make_graph(400, 6, 8, 4, seed=0)
+    same = (g.labels[g.edge_src] == g.labels[g.edge_dst]).mean()
+    assert same > 0.5       # community structure exists
+    assert g.row_ptr[-1] == len(g.col_idx)

@@ -1,0 +1,50 @@
+"""Serving engine: continuous batching correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tf
+from repro.serve.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama3-8b")
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_continuous_batching_matches_single_slot(setup):
+    cfg, params = setup
+    prompts = [np.arange(5) % cfg.vocab, np.arange(11) % cfg.vocab,
+               np.arange(7) % cfg.vocab, np.arange(9) % cfg.vocab,
+               np.arange(4) % cfg.vocab]
+    eng = ServeEngine(params, cfg, slots=3, max_len=64, dtype=jnp.float32)
+    outs = eng.generate(prompts, max_new_tokens=6)
+    for pi in (0, 2, 4):
+        solo = ServeEngine(params, cfg, slots=1, max_len=64,
+                           dtype=jnp.float32)
+        assert solo.generate([prompts[pi]], max_new_tokens=6)[0] == outs[pi]
+
+
+def test_queue_overflow_drains(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=48, dtype=jnp.float32)
+    prompts = [np.arange(3 + i) % cfg.vocab for i in range(7)]
+    outs = eng.generate(prompts, max_new_tokens=4)
+    assert all(len(o) == 4 for o in outs)
+    assert not eng.queue and all(a is None for a in eng.active)
+
+
+def test_eos_terminates_early(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, dtype=jnp.float32)
+    # find what the model emits, then use it as the EOS token
+    probe = eng.generate([np.arange(6) % cfg.vocab], max_new_tokens=3)[0]
+    eng2 = ServeEngine(params, cfg, slots=1, max_len=64, dtype=jnp.float32)
+    r = eng2.submit(np.arange(6) % cfg.vocab, max_new_tokens=10,
+                    eos_id=probe[1])
+    eng2.run_until_drained()
+    assert r.done and len(r.out_tokens) <= 3

@@ -1,0 +1,62 @@
+"""End-to-end behaviour tests for the paper's system: index -> retrieve ->
+augment -> generate, plus the paper-claim invariants (recall, prefetch)."""
+import numpy as np
+import pytest
+
+from repro.core.interface import HNSW
+from repro.core.tiered import simulate_search_traffic
+from repro.data.corpus import BUILTIN_CORPUS
+from repro.data.synthetic import make_corpus
+from repro.serve.rag import RAGPipeline
+
+
+@pytest.fixture(scope="module")
+def corpus_index():
+    data = make_corpus(1200, 32, seed=0)
+    idx = HNSW(distance_function="cosine", M=8, ef_construction=60)
+    idx.bulk_insert([f"d{i}" for i in range(len(data))], data)
+    return idx, data
+
+
+def test_query_recall_vs_exact(corpus_index):
+    """HNSW must recover >=85% of true neighbors at ef=64 (paper §3.1)."""
+    idx, data = corpus_index
+    rng = np.random.default_rng(1)
+    hits = total = 0
+    for qi in rng.integers(0, len(data), 20):
+        q = data[qi] + 0.05 * rng.normal(size=data.shape[1])
+        keys, _ = idx.query(q, k=10, ef=64)
+        exact_ids, _ = idx.exact_query(q, k=10)
+        hits += len({k for k in keys if k} & {f"d{i}" for i in exact_ids})
+        total += 10
+    assert hits / total >= 0.85, hits / total
+
+
+def test_query_self_is_nearest(corpus_index):
+    idx, data = corpus_index
+    keys, dists = idx.query(data[42], k=3)
+    assert keys[0] == "d42" and dists[0] < 1e-4
+
+
+def test_prefetch_reduces_transactions(corpus_index):
+    """The paper's §3.2 claim: graph prefetching cuts slow-tier reads."""
+    idx, data = corpus_index
+    g = idx._graph or idx._builder.graph()
+    queries = make_corpus(15, 32, seed=3)
+    with_p = simulate_search_traffic(g, queries, ef=32, cache_rows=256,
+                                     prefetch_p=16)
+    without = simulate_search_traffic(g, queries, ef=32, cache_rows=256,
+                                      prefetch_p=1, use_graph_prefetch=False)
+    assert with_p.transactions < 0.75 * without.transactions
+    assert with_p.as_dict()["hit_rate"] > without.as_dict()["hit_rate"]
+
+
+def test_rag_end_to_end_retrieves_relevant_docs():
+    rag = RAGPipeline()
+    rag.add_documents(BUILTIN_CORPUS)
+    out = rag.answer("how does mememo prefetch from IndexedDB?", k=3)
+    assert any(d.key.startswith("mememo") for d in out["docs"])
+    assert "{{user}}" not in out["prompt"]
+    assert "{{context}}" not in out["prompt"]
+    out2 = rag.answer("bandwidth of a TPU chip", k=2)
+    assert out2["docs"][0].key.startswith("tpu")

@@ -1,0 +1,153 @@
+"""Optimizer math, training loop, checkpointing, fault tolerance."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.data.synthetic import lm_batches
+from repro.models import transformer as tf
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import (StragglerWatchdog, run_resilient)
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, warmup_cosine)
+from repro.train.train_loop import fit, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_matches_reference_math():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      grad_clip=0.0)
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    st_ = adamw_init(p)
+    p2, st2, _ = adamw_update(cfg, p, g, st_)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.99)
+    want = np.asarray(p["w"]) - 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-6)
+
+
+@given(scale=st.floats(0.1, 100.0))
+@settings(max_examples=10, deadline=None)
+def test_clip_by_global_norm_property(scale):
+    g = {"a": jnp.ones((4, 4)) * scale, "b": jnp.ones((2,)) * scale}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    from repro.utils import tree_norm
+    assert float(tree_norm(clipped)) <= 1.0 + 1e-4
+
+
+def test_warmup_cosine_schedule():
+    s = warmup_cosine(1e-3, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1e-3) < 1e-9
+    assert float(s(100)) < float(s(50)) < float(s(10))
+    assert float(s(100)) >= 1e-4 - 1e-9          # min_ratio floor
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = AdamWConfig(lr=1e-2, weight_decay=1.0, grad_clip=0.0)
+    p = {"w": jnp.ones((3, 3)), "b": jnp.ones((3,))}
+    g = {"w": jnp.zeros((3, 3)), "b": jnp.zeros((3,))}
+    p2, _, _ = adamw_update(cfg, p, g, adamw_init(p))
+    assert float(jnp.abs(p2["w"] - 1.0).max()) > 1e-4   # decayed
+    np.testing.assert_allclose(np.asarray(p2["b"]), 1.0)  # not decayed
+
+
+# ---------------------------------------------------------------------------
+# loop + checkpoint + fault tolerance
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_smoke_config("llama3-8b")
+    loss_fn = lambda p, tokens, labels: tf.lm_loss(p, cfg, tokens, labels,
+                                                   dtype=jnp.float32)
+    step = make_train_step(loss_fn, AdamWConfig(lr=1e-3), donate=False)
+    return cfg, step
+
+
+def test_loss_decreases(lm_setup):
+    cfg, step = lm_setup
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    _, _, hist = fit(params, step, lm_batches(cfg.vocab, 8, 33, seed=0),
+                     steps=15, log_every=0)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as td:
+        ckpt = CheckpointManager(td, keep=2)
+        state = {"a": jnp.arange(6).reshape(2, 3),
+                 "nested": {"b": jnp.ones(4)}}
+        for s in (1, 2, 3):
+            ckpt.save(s, state, meta={"tag": "x"})
+        assert ckpt.all_steps() == [2, 3]         # keep-last-2 GC
+        got, meta = ckpt.restore(state, step=3)
+        np.testing.assert_array_equal(np.asarray(got["a"]),
+                                      np.asarray(state["a"]))
+        assert meta["tag"] == "x" and meta["step"] == 3
+        assert not [f for f in os.listdir(td) if f.endswith(".tmp.npz")]
+
+
+def test_resilient_restart_is_exact(lm_setup):
+    """Failures + restore must replay to the same final loss."""
+    cfg, step = lm_setup
+
+    def batch_fn(s):
+        return next(lm_batches(cfg.vocab, 8, 33, seed=0, start_step=s))
+
+    with tempfile.TemporaryDirectory() as td:
+        p1 = tf.init_lm(jax.random.PRNGKey(0), cfg)
+        _, _, info1 = run_resilient(p1, step, batch_fn, steps=12,
+                                    ckpt=CheckpointManager(td + "/a", keep=3),
+                                    ckpt_every=5, fail_at=[7])
+        p2 = tf.init_lm(jax.random.PRNGKey(0), cfg)
+        _, _, info2 = run_resilient(p2, step, batch_fn, steps=12,
+                                    ckpt=CheckpointManager(td + "/b", keep=3),
+                                    ckpt_every=5)
+        assert info1["restarts"] == 1 and info2["restarts"] == 0
+        assert abs(info1["losses"][11] - info2["losses"][11]) < 2e-3
+
+
+def test_straggler_watchdog_flags_outliers():
+    wd = StragglerWatchdog(min_samples=5, factor=3.0)
+    for i in range(10):
+        wd.observe(i, 0.01)
+    assert wd.observe(10, 0.2) is True
+    assert len(wd.events) == 1 and wd.events[0].step == 10
+
+
+def test_data_pipeline_deterministic_restart():
+    a = next(lm_batches(100, 4, 16, seed=7, start_step=5))
+    b = next(lm_batches(100, 4, 16, seed=7, start_step=5))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = next(lm_batches(100, 4, 16, seed=7, start_step=6))
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_microbatched_step_matches_full_batch(lm_setup):
+    cfg, _ = lm_setup
+    loss_fn = lambda p, tokens, labels: tf.lm_loss(p, cfg, tokens, labels,
+                                                   dtype=jnp.float32)
+    s1 = make_train_step(loss_fn, AdamWConfig(lr=1e-3, grad_clip=0.0),
+                         microbatches=1, donate=False)
+    s2 = make_train_step(loss_fn, AdamWConfig(lr=1e-3, grad_clip=0.0),
+                         microbatches=2, donate=False)
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = next(lm_batches(cfg.vocab, 8, 33, seed=0))
+    from repro.train.optimizer import adamw_init
+    p1, _, m1 = s1(params, adamw_init(params), batch)
+    p2, _, m2 = s2(params, adamw_init(params), batch)
+    # microbatch-mean loss == full-batch loss (linear in batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-3, atol=3e-5)
