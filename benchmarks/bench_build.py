@@ -1,14 +1,41 @@
 """Paper §5 construction claim: 1M x 384-d inserts (M=5, efC=20) took
 ~94 min in Chrome => 5.64 ms/vector. We measure our builders at CPU-feasible
-scale and report ms/vector + the speedup over the browser baseline."""
+scale and report ms/vector + the speedup over the browser baseline.
+
+Also: the incremental device-graph sync micro-benchmark (DESIGN.md §3) —
+after a query makes the graph device-resident, an insert must upload only
+its dirty rows, not re-convert all N rows."""
 import time
 
+import jax
 import numpy as np
 
 from repro.core import hnsw_build
 from repro.data.synthetic import make_corpus
 
 PAPER_MS_PER_VEC = 94 * 60 * 1000 / 1_000_000      # 5.64 ms
+
+
+def _synthetic_hnsw_index(n: int, dim: int, M: int, seed: int = 0):
+    """An HNSW VectorIndex over a fabricated random M-regular graph: the
+    sync benchmark measures host->device transfer, not graph quality, and
+    building a real 100k graph on CPU would dominate the suite's runtime."""
+    from repro.core.interface import HNSW
+
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(n, dim)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    b = hnsw_build.SequentialBuilder(dim, M=M, ef_construction=20,
+                                     metric="cosine",
+                                     capacity=n + 256)   # headroom: inserts
+    b.vectors[:n] = v                                    # must not regrow
+    b.neighbors0[:n] = rng.integers(0, n, size=(n, 2 * M)).astype(np.int32)
+    b.n, b.entry, b.max_level = n, 0, 0
+    idx = HNSW(distance_function="cosine", M=M, ef_construction=20)
+    idx._builder = b
+    idx._keys = [f"d{i}" for i in range(n)]
+    idx._key2id = {k: i for i, k in enumerate(idx._keys)}
+    return idx
 
 
 def run(rows: list):
@@ -27,3 +54,38 @@ def run(rows: list):
         ms = dt / n * 1e3
         rows.append((f"build_bulk_n{n}_d{dim}", ms * 1e3,
                      f"{PAPER_MS_PER_VEC / ms:.1f}x_vs_paper"))
+
+    # ---------------- incremental sync vs full re-upload (N=100k) ----------
+    n, dim, M = 100_000, 64, 8
+    idx = _synthetic_hnsw_index(n, dim, M)
+    rng = np.random.default_rng(1)
+    idx.query(rng.normal(size=dim).astype(np.float32), k=1, ef=20)  # resident
+    # warm both sync paths (compile the donated scatter, page the buffers)
+    idx.insert("warm-0", rng.normal(size=dim).astype(np.float32))
+    jax.block_until_ready(idx._dg())
+    idx._device_graph = None
+    jax.block_until_ready(idx._dg())
+    reps = 5
+    t_inc = t_full = 0.0
+    dirty = 0
+    for r in range(reps):
+        # insert-after-query, incremental path: only dirty rows travel
+        idx.insert(f"new-inc-{r}", rng.normal(size=dim).astype(np.float32))
+        dirty += len(idx._builder.journal)
+        t0 = time.perf_counter()
+        dg = idx._dg()
+        jax.block_until_ready(dg)
+        t_inc += time.perf_counter() - t0
+        # same insert, forced full to_device_graph re-upload
+        idx.insert(f"new-full-{r}", rng.normal(size=dim).astype(np.float32))
+        idx._device_graph = None
+        t0 = time.perf_counter()
+        dg = idx._dg()
+        jax.block_until_ready(dg)
+        t_full += time.perf_counter() - t0
+    us_inc = t_inc / reps * 1e6
+    us_full = t_full / reps * 1e6
+    rows.append((f"sync_incremental_n{n}", us_inc,
+                 f"dirty_rows={dirty // reps}"))
+    rows.append((f"sync_full_rebuild_n{n}", us_full,
+                 f"{us_full / max(us_inc, 1e-9):.1f}x_slower_than_incremental"))

@@ -1,18 +1,26 @@
 """Paper §5 query claim ("real time at 1M") + the §3.1 recall/ef tradeoff.
 
-Measures batched HNSW search latency + recall@10 vs efSearch, and the exact
-flat-index scan latency (the brute-force bound), at CPU-feasible scale.
+Measures batched search latency + recall@10 vs efSearch through the
+unified ``VectorIndex`` protocol (hnsw backend), and the exact flat-index
+scan latency (the brute-force bound), at CPU-feasible scale.
 """
 import time
 
 import jax
 import numpy as np
 
-from repro.core import hnsw, hnsw_build
-from repro.core.flat import FlatIndex
+from repro.core import make_index
 from repro.data.synthetic import make_corpus
 from repro.kernels import ref
 import jax.numpy as jnp
+
+
+def _key_recall(found_keys, true_i) -> float:
+    hits = 0
+    for row, t in zip(found_keys, np.asarray(true_i)):
+        got = {int(k[1:]) for k in row if k is not None}
+        hits += len(got & {int(x) for x in t})
+    return hits / true_i.size
 
 
 def run(rows: list):
@@ -22,29 +30,31 @@ def run(rows: list):
     # realistic retrieval: queries near the corpus manifold (perturbed rows)
     queries = (data[rng.integers(0, n, q_n)]
                + 0.15 * rng.normal(size=(q_n, dim)).astype(np.float32))
-    g = hnsw_build.build_sequential(data, M=8, ef_construction=60)
-    dg = hnsw.to_device_graph(g)
+    keys = [f"d{i}" for i in range(n)]
+    idx = make_index("hnsw", metric="cosine", M=8, ef_construction=60)
+    idx.bulk_insert(keys, data)
     qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
-    _, true_i = ref.distance_topk_ref(jnp.asarray(g.vectors),
-                                      jnp.asarray(qn), 10)
+    datan = data / np.linalg.norm(data, axis=1, keepdims=True)
+    _, true_i = ref.distance_topk_ref(jnp.asarray(datan), jnp.asarray(qn), 10)
+    true_i = np.asarray(true_i)
 
     for ef in (16, 32, 64, 128):
-        ids, _ = hnsw.search_graph(dg, queries, k=10, ef=ef)   # compile
-        jax.block_until_ready(ids)
+        found, _ = idx.query(queries, k=10, ef=ef)        # compile + sync
         t0 = time.perf_counter()
         for _ in range(3):
-            ids, _ = hnsw.search_graph(dg, queries, k=10, ef=ef)
-            jax.block_until_ready(ids)
+            found, d = idx.query(queries, k=10, ef=ef)
+            jax.block_until_ready(d) if hasattr(d, "block_until_ready") \
+                else None
         us = (time.perf_counter() - t0) / 3 / q_n * 1e6
-        rec = hnsw.recall_at_k(np.asarray(ids), np.asarray(true_i))
+        rec = _key_recall(found, true_i)
         rows.append((f"hnsw_query_n{n}_ef{ef}", us, f"recall@10={rec:.3f}"))
 
-    flat = FlatIndex.build(data)
-    d, i = flat.query(queries, k=10)
-    jax.block_until_ready(i)
+    flat = make_index("flat", metric="cosine", dim=dim)
+    flat.bulk_insert(keys, data)
+    flat.query(queries, k=10)                             # compile + pack
     t0 = time.perf_counter()
     for _ in range(3):
-        d, i = flat.query(queries, k=10)
-        jax.block_until_ready(i)
+        found, _ = flat.query(queries, k=10)
     us = (time.perf_counter() - t0) / 3 / q_n * 1e6
-    rows.append((f"flat_query_n{n}", us, "exact"))
+    rows.append((f"flat_query_n{n}", us,
+                 f"exact recall@10={_key_recall(found, true_i):.3f}"))

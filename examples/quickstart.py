@@ -1,4 +1,5 @@
-"""Quickstart: the MeMemo API (paper §2.1, Code 1 parity).
+"""Quickstart: the MeMemo API (paper §2.1, Code 1 parity) plus the unified
+mutable ``VectorIndex`` layer (full CRUD across flat/ivf/hnsw/tiered).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,6 +8,7 @@ import tempfile
 
 import numpy as np
 
+from repro.core import make_index
 from repro.core.interface import HNSW
 from repro.core.tiered import auto_prefetch_p, simulate_search_traffic
 from repro.data.synthetic import make_corpus
@@ -26,18 +28,36 @@ def main():
     print("query ->", list(zip(found_keys, np.round(distances, 4))))
     assert found_keys[0] == "doc-123"
 
-    # --- exact oracle comparison (recall) -----------------------------------
-    exact_ids, _ = index.exact_query(query, k=5)
-    print("exact ids:", exact_ids[:5])
+    # --- full CRUD: update + delete (the privacy operation) -----------------
+    index.update("doc-124", values[123])                 # re-embed in place
+    index.delete("doc-123")                              # retract: tombstoned
+    k2, _ = index.query(query, k=5)
+    print("after delete/update ->", k2)
+    assert "doc-123" not in k2 and k2[0] == "doc-124"
+    assert index.size == n - 1
 
-    # --- export / load (persistent index, §2.1) -----------------------------
+    # --- exact oracle comparison (recall) -----------------------------------
+    exact_keys, _ = index.exact_query(query, k=5)
+    print("exact keys:", exact_keys[:5])
+    assert "doc-123" not in exact_keys                   # oracle honors deletes
+
+    # --- export / load (persistent index incl. tombstones, §2.1) ------------
     with tempfile.TemporaryDirectory() as td:
         path = os.path.join(td, "index.npz")
         index.export_index(path)
         loaded = HNSW.load_index(path)
-        k2, _ = loaded.query(query, k=5)
-        assert k2 == found_keys
+        k3, _ = loaded.query(query, k=5)
+        assert k3 == k2
         print(f"export/load roundtrip OK ({os.path.getsize(path)/1e6:.1f} MB)")
+
+    # --- one protocol, four backends ----------------------------------------
+    for kind in ("flat", "ivf", "hnsw", "tiered"):
+        idx = make_index(kind, dim=dim, metric="cosine", M=8,
+                         ef_construction=60)
+        idx.bulk_insert(keys[:500], values[:500])
+        got, _ = idx.query(values[42], k=1)
+        assert got[0] == "doc-42", (kind, got)
+        print(f"make_index({kind!r:>9}) -> top-1 self-query OK")
 
     # --- the two-tier memory story (§3.2) ------------------------------------
     g = index._graph or index._builder.graph()

@@ -6,7 +6,12 @@
   4. generate with a small in-framework LM served through the
      continuous-batching engine.
 
-    PYTHONPATH=src python examples/rag_playground.py [--interactive]
+    PYTHONPATH=src python examples/rag_playground.py \
+        [--interactive] [--index {flat,ivf,hnsw,tiered}]
+
+The retriever is any ``VectorIndex`` backend; documents can also be
+retracted live (``del <key>`` in interactive mode) — the tombstone is
+honored by every later retrieval.
 """
 import argparse
 
@@ -26,15 +31,16 @@ QUERIES = [
 ]
 
 
-def main(interactive: bool = False):
+def main(interactive: bool = False, index: str = "hnsw"):
     cfg = get_smoke_config("llama3-8b")
     params = tf.init_lm(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, slots=2, max_len=128, dtype=jnp.float32)
 
-    rag = RAGPipeline(generate_fn=lm_generate_fn(engine, cfg.vocab, 96))
+    rag = RAGPipeline(index_kind=index,
+                      generate_fn=lm_generate_fn(engine, cfg.vocab, 96))
     rag.add_documents(BUILTIN_CORPUS)
     print(f"indexed {rag.index.size} documents "
-          f"(M={rag.index.M}, efC={rag.index.ef_construction})\n")
+          f"(backend={index}, {type(rag.index).__name__})\n")
 
     def ask(q: str):
         out = rag.answer(q, k=3)
@@ -52,10 +58,21 @@ def main(interactive: bool = False):
             q = input("query> ").strip()
             if not q:
                 break
+            if q.startswith("del "):             # retract a document live
+                key = q[4:].strip()
+                try:
+                    rag.delete_document(key)
+                    print(f"   deleted {key!r} "
+                          f"({rag.index.size} docs remain)\n")
+                except KeyError:
+                    print(f"   no such key {key!r}\n")
+                continue
             ask(q)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--interactive", action="store_true")
+    ap.add_argument("--index", default="hnsw",
+                    choices=("flat", "ivf", "hnsw", "tiered"))
     main(**vars(ap.parse_args()))

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the one command CI and contributors run.
+#   scripts/run_tests.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

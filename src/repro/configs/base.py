@@ -169,6 +169,11 @@ class RetrievalConfig:
     ef_search: int = 64
     prefetch_p: int = 0                # 0 -> auto from dim (paper section 3.2)
     n_vectors: int = 1_000_000
+    # VectorIndex backend selection (core/index.py make_index): the paper's
+    # own index is HNSW; flat/ivf/tiered serve other workload points.
+    index_kind: str = "hnsw"
+    nlist: int = 64                    # ivf: number of inverted lists
+    nprobe: int = 8                    # ivf: lists probed per query
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,3 +40,14 @@ def smoke_config() -> RetrievalConfig:
         ef_search=24,
         n_vectors=512,
     )
+
+
+def make_paper_index(kind: str | None = None, **overrides):
+    """The paper-configured retriever as a ``VectorIndex`` (any backend)."""
+    from repro.core.index import make_index_from_config
+    return make_index_from_config(CONFIG.model, kind=kind, **overrides)
+
+
+def make_smoke_index(kind: str | None = None, **overrides):
+    from repro.core.index import make_index_from_config
+    return make_index_from_config(smoke_config(), kind=kind, **overrides)

@@ -1,3 +1,12 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Unified retrieval layer: every ANN backend (flat / IVF / HNSW / tiered)
+# implements the mutable keyed ``VectorIndex`` protocol; construct one via
+# ``make_index(kind, **cfg)``. See DESIGN.md §1.
+from repro.core.index import (INDEX_KINDS, VectorIndex, make_index,
+                              make_index_from_config)
+
+__all__ = ["INDEX_KINDS", "VectorIndex", "make_index",
+           "make_index_from_config"]

@@ -3,16 +3,27 @@
 Routes through kernels/ops.flat_topk (Pallas distance+top-k on TPU, jnp
 reference on CPU). This is also the "real time at 1M" claim's workload
 (paper section 5): one query against the full database.
+
+Two layers here:
+  * ``FlatIndex`` — the immutable device-array core (kept as-is: it is the
+    oracle other backends call into);
+  * ``FlatVectorIndex`` — the keyed, mutable ``VectorIndex`` backend
+    (DESIGN.md §1): host-side storage with tombstones, device array
+    rebuilt lazily from live rows on the first query after a mutation.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hnsw_build import normalize_rows
+from repro.core.index import VectorIndex
 from repro.kernels import ops
 
 
@@ -43,3 +54,134 @@ class FlatIndex:
     @property
     def n(self) -> int:
         return self.vectors.shape[0]
+
+
+def _pad_results(keys: list[list], d: np.ndarray, k: int
+                 ) -> tuple[list[list], np.ndarray]:
+    """Protocol shape contract: k > live pads keys with None, dists with
+    INF, so every backend returns exactly k slots (DESIGN.md §1)."""
+    short = k - d.shape[1]
+    if short <= 0:
+        return keys, d
+    keys = [row + [None] * short for row in keys]
+    d = np.concatenate(
+        [d, np.full((d.shape[0], short), np.float32(3e38))], axis=1)
+    return keys, d
+
+
+class FlatVectorIndex(VectorIndex):
+    """Mutable keyed flat index. Exact by construction, so ``query`` and
+    ``exact_query`` coincide. Mutations mark the device array stale; the
+    next query compacts live rows host-side and re-uploads once."""
+
+    def __init__(self, *, metric: str = "cosine", dim: int | None = None):
+        if metric not in ("cosine", "ip", "l2"):
+            raise ValueError(f"unknown metric {metric!r}")
+        self.metric = metric
+        self.dim = dim
+        self._vecs = np.zeros((0, dim or 0), np.float32)   # raw host vectors
+        self._keys: list[str] = []                         # row -> key
+        self._key2row: dict[str, int] = {}
+        self._alive = np.zeros(0, bool)
+        self._flat: FlatIndex | None = None                # device cache
+        self._live_rows: np.ndarray | None = None
+
+    # ------------------------------------------------------------ mutation
+    def insert(self, key: str, value: Sequence[float]) -> None:
+        v = np.asarray(value, np.float32).reshape(-1)
+        if self.dim is None:
+            self.dim = v.shape[0]
+            self._vecs = np.zeros((0, self.dim), np.float32)
+        if key in self._key2row:
+            self._alive[self._key2row[key]] = False
+        row = len(self._keys)
+        self._vecs = np.concatenate([self._vecs, v[None]])
+        self._keys.append(key)
+        self._alive = np.concatenate([self._alive, np.ones(1, bool)])
+        self._key2row[key] = row
+        self._flat = None
+
+    def bulk_insert(self, keys: Sequence[str], values) -> None:
+        values = np.asarray(values, np.float32)
+        if len(keys) != len(values):
+            raise ValueError("keys/values length mismatch")
+        for key in keys:
+            if key in self._key2row:
+                self._alive[self._key2row[key]] = False
+        if self.dim is None:
+            self.dim = values.shape[1]
+            self._vecs = np.zeros((0, self.dim), np.float32)
+        base = len(self._keys)
+        self._vecs = np.concatenate([self._vecs, values])
+        self._keys.extend(keys)
+        self._alive = np.concatenate([self._alive, np.ones(len(keys), bool)])
+        for j, key in enumerate(keys):
+            self._key2row[key] = base + j
+        self._flat = None
+
+    def update(self, key: str, value: Sequence[float]) -> None:
+        if key not in self._key2row:
+            raise KeyError(key)
+        self.insert(key, value)
+
+    def delete(self, key: str) -> None:
+        row = self._key2row.pop(key)               # KeyError if absent
+        self._alive[row] = False
+        self._flat = None
+
+    # --------------------------------------------------------------- query
+    def _device(self) -> FlatIndex:
+        if self._flat is None:
+            live = np.flatnonzero(self._alive)
+            if live.size == 0:
+                raise ValueError("index is empty")
+            self._live_rows = live
+            self._flat = FlatIndex.build(self._vecs[live], metric=self.metric)
+        return self._flat
+
+    def query(self, query, k: int = 10, **kw):
+        flat = self._device()
+        q = np.asarray(query, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None]
+        d, i = flat.query(q, min(k, flat.n))
+        d, i = np.asarray(d), np.asarray(i)
+        keys, d = _pad_results(
+            [[self._keys[int(self._live_rows[j])] for j in row] for row in i],
+            d, k)
+        if squeeze:
+            return keys[0], d[0]
+        return keys, d
+
+    exact_query = query                    # flat IS the brute-force oracle
+
+    # --------------------------------------------------------- persistence
+    def export(self, path: str) -> None:
+        if not self._keys:
+            raise ValueError("index is empty")
+        meta = {"metric": self.metric, "dim": self.dim, "keys": self._keys}
+        tmp = path + ".tmp.npz"
+        np.savez_compressed(tmp[:-4], vectors=self._vecs, alive=self._alive,
+                            meta=np.frombuffer(json.dumps(meta).encode(),
+                                               dtype=np.uint8))
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "FlatVectorIndex":
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(bytes(z["meta"]).decode())
+        idx = cls(metric=meta["metric"], dim=meta["dim"])
+        idx._vecs = np.asarray(z["vectors"], np.float32)
+        idx._alive = np.asarray(z["alive"], bool)
+        idx._keys = list(meta["keys"])
+        idx._key2row = {k: i for i, k in enumerate(idx._keys)
+                        if idx._alive[i]}
+        return idx
+
+    @property
+    def size(self) -> int:
+        return len(self._key2row)
+
+    def keys(self) -> list[str]:
+        return [k for i, k in enumerate(self._keys) if self._alive[i]]

@@ -34,18 +34,24 @@ INF = jnp.float32(3.0e38)
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class DeviceGraph:
-    """HNSW graph as dense device tensors."""
+    """HNSW graph as dense device tensors.
+
+    ``deleted`` is the tombstone mask (DESIGN.md §3): tombstoned rows stay
+    traversable during beam search (hnswlib-style, so graph connectivity
+    survives deletions) but are excluded from returned results.
+    """
     vectors: jax.Array      # [N, D] f32 (normalised if cosine)
     neighbors0: jax.Array   # [N, 2M] int32 (-1 pad)
     upper: jax.Array        # [L, N, M] int32 (-1 pad); L may be 0
     levels: jax.Array       # [N] int32
     entry: jax.Array        # scalar int32
+    deleted: jax.Array      # [N] bool tombstones
     max_level: int          # static
     metric: str             # static
 
     def tree_flatten(self):
         return ((self.vectors, self.neighbors0, self.upper, self.levels,
-                 self.entry), (self.max_level, self.metric))
+                 self.entry, self.deleted), (self.max_level, self.metric))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -56,16 +62,75 @@ class DeviceGraph:
         return self.vectors.shape[0]
 
 
-def to_device_graph(g: HNSWGraph) -> DeviceGraph:
+def to_device_graph(g: HNSWGraph, deleted: np.ndarray | None = None
+                    ) -> DeviceGraph:
+    """Full host->device conversion (the from-scratch path; incremental
+    updates go through :func:`apply_row_updates`)."""
+    n = g.vectors.shape[0]
+    if deleted is None:
+        deleted = np.zeros(n, bool)
     return DeviceGraph(
         vectors=jnp.asarray(g.vectors, jnp.float32),
         neighbors0=jnp.asarray(g.neighbors0, jnp.int32),
         upper=jnp.asarray(g.upper, jnp.int32),
         levels=jnp.asarray(g.levels, jnp.int32),
         entry=jnp.asarray(max(g.entry, 0), jnp.int32),
+        deleted=jnp.asarray(deleted[:n], bool),
         max_level=int(g.max_level),
         metric=g.metric,
     )
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _scatter_rows_jit(vectors, neighbors0, upper, levels,
+                      rows, v_new, n0_new, u_new, l_new):
+    """Donated in-place row scatter: the resident buffers are updated
+    without a whole-buffer copy (O(|rows|) work, not O(N))."""
+    vectors = vectors.at[rows].set(v_new)
+    neighbors0 = neighbors0.at[rows].set(n0_new)
+    if upper.shape[0]:
+        upper = upper.at[:, rows].set(u_new)
+    levels = levels.at[rows].set(l_new)
+    return vectors, neighbors0, upper, levels
+
+
+def apply_row_updates(dg: DeviceGraph, g: HNSWGraph, rows,
+                      deleted: np.ndarray | None = None) -> DeviceGraph:
+    """Incremental device-graph sync (DESIGN.md §3): copy only the dirty
+    ``rows`` of the host graph into the resident device tensors — O(|rows|)
+    transfer + in-place donated scatter instead of a full re-upload.
+
+    CONSUMES ``dg``: its buffers are donated to the updated graph, so the
+    caller must drop its reference and use the returned DeviceGraph.
+    Shapes must match (the host graph is the same capacity-padded view the
+    resident graph was built from). ``deleted`` refreshes the tombstone
+    mask; entry/max_level are always refreshed (scalar-cheap).
+    """
+    if dg.vectors.shape != g.vectors.shape or dg.upper.shape != g.upper.shape:
+        raise ValueError("capacity/layer shape changed; full rebuild required")
+    rows = np.asarray(sorted(int(r) for r in rows), np.int32)
+    if rows.size:
+        # pad the row set to the next power of two so the jitted scatter
+        # compiles once per bucket, not once per distinct dirty-row count;
+        # pad slots repeat rows[0] with identical payload (idempotent)
+        bucket = 1 << (int(rows.size) - 1).bit_length()
+        pad = np.full(bucket - rows.size, rows[0], np.int32)
+        rp = np.concatenate([rows, pad])
+        u_new = (g.upper[:, rp] if g.upper.shape[0]
+                 else np.zeros((0, bucket, 1), np.int32))
+        vectors, neighbors0, upper, levels = _scatter_rows_jit(
+            dg.vectors, dg.neighbors0, dg.upper, dg.levels,
+            jnp.asarray(rp), jnp.asarray(g.vectors[rp], jnp.float32),
+            jnp.asarray(g.neighbors0[rp], jnp.int32),
+            jnp.asarray(u_new, jnp.int32),
+            jnp.asarray(g.levels[rp], jnp.int32))
+        dg = dataclasses.replace(dg, vectors=vectors, neighbors0=neighbors0,
+                                 upper=upper, levels=levels)
+    new_deleted = dg.deleted if deleted is None \
+        else jnp.asarray(deleted[: dg.n], bool)
+    return dataclasses.replace(
+        dg, entry=jnp.asarray(max(int(g.entry), 0), jnp.int32),
+        deleted=new_deleted, max_level=int(g.max_level))
 
 
 # ---------------------------------------------------------------------------
@@ -194,6 +259,13 @@ def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
     for layer in range(g.max_level, 0, -1):      # static unroll (few layers)
         ep, ep_dist = _greedy_layer(g, q, ep, ep_dist, layer)
     beam_i, beam_d = _beam_search(g, q, ep, ep_dist, ef, max_iters)
+    # tombstone filter: deleted rows were traversable during the beam search
+    # but must not be returned (DESIGN.md §3)
+    dead = jnp.take(g.deleted, jnp.clip(beam_i, 0, g.n - 1)) | (beam_i < 0)
+    beam_d = jnp.where(dead, INF, beam_d)
+    beam_i = jnp.where(dead, -1, beam_i)
+    beam_d, beam_i = jax.lax.sort((beam_d, beam_i), num_keys=1,
+                                  is_stable=True)
     return beam_i[:, :k], beam_d[:, :k]
 
 

@@ -90,6 +90,29 @@ class SequentialBuilder:
         self.levels = np.zeros(cap, np.int32)
         self.neighbors0 = np.full((cap, self.m_max0), -1, np.int32)
         self.upper = np.full((max_level_cap, cap, M), -1, np.int32)
+        # dirty-row journal: ids whose row data (vector / adjacency / level)
+        # changed since the consumer last synced. Drives the incremental
+        # device-graph upload (DESIGN.md §3); consumers clear it after sync.
+        self.journal: set[int] = set()
+
+    @classmethod
+    def from_graph(cls, g: HNSWGraph, *, ef_construction: int = 200,
+                   max_level_cap: int = 12, seed: int = 0
+                   ) -> "SequentialBuilder":
+        """Adopt an existing graph (e.g. from ``bulk_build``) as mutable
+        builder state, so later inserts APPEND instead of replacing it."""
+        n = g.n
+        b = cls(g.vectors.shape[1], M=g.M, ef_construction=ef_construction,
+                metric=g.metric, capacity=max(n, 8),
+                max_level_cap=max_level_cap, seed=seed)
+        b.vectors[:n] = g.vectors[:n]
+        b.levels[:n] = g.levels[:n]
+        b.neighbors0[:n] = g.neighbors0[:n]
+        b.upper[: g.upper.shape[0], :n] = g.upper[:, :n]
+        b.n = n
+        b.entry = int(g.entry)
+        b.max_level = int(g.max_level)
+        return b
 
     # -- storage helpers ----------------------------------------------------
     def _grow(self, need: int):
@@ -118,6 +141,7 @@ class SequentialBuilder:
             self.neighbors0[node] = row
         else:
             self.upper[layer - 1, node] = row
+        self.journal.add(int(node))
 
     # -- Alg. 2: greedy ef-search on one layer -------------------------------
     def _search_layer(self, q: np.ndarray, eps: list[int], ef: int,
@@ -185,6 +209,7 @@ class SequentialBuilder:
         lvl = min(level, self.max_level_cap)
         self.levels[node] = lvl
         self.n += 1
+        self.journal.add(node)
 
         if self.entry < 0:
             self.entry, self.max_level = node, lvl

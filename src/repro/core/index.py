@@ -1,0 +1,146 @@
+"""The unified mutable retrieval layer: one ``VectorIndex`` protocol for
+every ANN backend (flat / IVF / HNSW / tiered).
+
+MeMemo's core promise is an *updatable* private knowledge base on-device:
+users add, correct, and retract personal documents, and the serving layer
+must not care which index structure sits underneath. Every backend
+implements the same keyed CRUD + query contract:
+
+    idx = make_index("hnsw", dim=384, metric="cosine")
+    idx.bulk_insert(keys, vectors)
+    idx.insert("doc-1", vec)            # single upsert
+    idx.update("doc-1", new_vec)        # re-embed in place
+    idx.delete("doc-0")                 # retract (tombstone, never returned)
+    keys, dists = idx.query(q, k=10)    # ANN search
+    keys, dists = idx.exact_query(q, k) # brute-force oracle, same live set
+    idx.export(path); Idx.load(path)    # tombstones + keys round-trip
+
+Design notes (DESIGN.md §1):
+  * keys are caller-owned strings; inserting an existing key is an update;
+  * ``delete`` is a soft delete everywhere — backends keep fixed device
+    shapes and exclude tombstoned rows from results (HNSW keeps them
+    traversable, hnswlib-style; see DESIGN.md §3);
+  * ``size`` counts live (non-deleted) keys;
+  * ``query``/``exact_query`` return ``(keys, dists)``; batched queries
+    return lists of lists. Missing slots (k > live) come back as ``None``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Sequence
+
+import numpy as np
+
+
+class VectorIndex(abc.ABC):
+    """Keyed, mutable ANN index. All four backends implement this."""
+
+    metric: str
+
+    # ------------------------------------------------------------ mutation
+    @abc.abstractmethod
+    def insert(self, key: str, value: Sequence[float]) -> None:
+        """Upsert one (key, vector) pair."""
+
+    def bulk_insert(self, keys: Sequence[str], values) -> None:
+        """Batched upsert; backends override when they have a faster path."""
+        values = np.asarray(values, np.float32)
+        if len(keys) != len(values):
+            raise ValueError("keys/values length mismatch")
+        for k, v in zip(keys, values):
+            self.insert(k, v)
+
+    @abc.abstractmethod
+    def update(self, key: str, value: Sequence[float]) -> None:
+        """Replace the vector of an existing key. KeyError if absent."""
+
+    @abc.abstractmethod
+    def delete(self, key: str) -> None:
+        """Soft-delete a key: never returned again. KeyError if absent."""
+
+    # --------------------------------------------------------------- query
+    @abc.abstractmethod
+    def query(self, query, k: int = 10, **kw):
+        """ANN top-k -> (keys, dists); batched input -> lists of lists."""
+
+    @abc.abstractmethod
+    def exact_query(self, query, k: int = 10):
+        """Brute-force top-k over the same live vectors -> (keys, dists)."""
+
+    # --------------------------------------------------------- persistence
+    @abc.abstractmethod
+    def export(self, path: str) -> None:
+        """Write the index (vectors, keys, tombstones) to ``path``."""
+
+    @classmethod
+    @abc.abstractmethod
+    def load(cls, path: str) -> "VectorIndex":
+        """Inverse of :meth:`export`."""
+
+    # ----------------------------------------------------------- introspect
+    @property
+    @abc.abstractmethod
+    def size(self) -> int:
+        """Number of live (non-deleted) keys."""
+
+    def __len__(self) -> int:
+        return self.size
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.keys()
+
+    @abc.abstractmethod
+    def keys(self) -> list[str]:
+        """Live keys, in insertion order."""
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+INDEX_KINDS = ("flat", "ivf", "hnsw", "tiered")
+
+
+def make_index(kind: str, **cfg) -> VectorIndex:
+    """Create a VectorIndex backend by name.
+
+    kind: "flat" | "ivf" | "hnsw" | "tiered". ``cfg`` passes through to the
+    backend constructor (common: metric, dim; hnsw/tiered: M,
+    ef_construction, ef_search; ivf: nlist, nprobe).
+    """
+    kind = kind.lower()
+    if kind == "flat":
+        from repro.core.flat import FlatVectorIndex
+        cfg.pop("M", None); cfg.pop("ef_construction", None)
+        cfg.pop("ef_search", None)
+        return FlatVectorIndex(**cfg)
+    if kind == "ivf":
+        from repro.core.ivf import IVFVectorIndex
+        cfg.pop("M", None); cfg.pop("ef_construction", None)
+        cfg.pop("ef_search", None)
+        return IVFVectorIndex(**cfg)
+    if kind == "hnsw":
+        from repro.core.interface import HNSW
+        cfg.pop("dim", None)          # HNSW infers dim from the first insert
+        metric = cfg.pop("metric", "cosine")
+        return HNSW(distance_function=metric, **cfg)
+    if kind == "tiered":
+        from repro.core.tiered import TieredIndex
+        cfg.pop("dim", None)
+        return TieredIndex(**cfg)
+    raise ValueError(f"unknown index kind {kind!r}; expected one of "
+                     f"{INDEX_KINDS}")
+
+
+def make_index_from_config(cfg, kind: str | None = None, **overrides
+                           ) -> VectorIndex:
+    """Build an index from a ``RetrievalConfig`` (configs/mememo.py)."""
+    kind = kind or getattr(cfg, "index_kind", "hnsw")
+    params = dict(dim=cfg.dim, metric=cfg.metric, M=cfg.M,
+                  ef_construction=cfg.ef_construction,
+                  ef_search=cfg.ef_search)
+    if kind == "ivf":
+        params = dict(dim=cfg.dim, metric=cfg.metric,
+                      nlist=getattr(cfg, "nlist", 64),
+                      nprobe=getattr(cfg, "nprobe", 8))
+    params.update(overrides)
+    return make_index(kind, **params)

@@ -1,4 +1,5 @@
-"""MeMemo-parity public API (paper §2.1, Code 1).
+"""MeMemo-parity public API (paper §2.1, Code 1) — now a full
+``VectorIndex`` backend with real mutation semantics (DESIGN.md §1/§3).
 
 TypeScript original:
     const index = new HNSW({ distanceFunction: 'cosine' });
@@ -9,14 +10,23 @@ TypeScript original:
 Python equivalent (camelCase aliases kept for 1:1 parity):
     index = HNSW(distance_function="cosine", M=5, ef_construction=20)
     index.bulk_insert(keys, values)
+    index.update("doc-3", new_vec)       # delete + reinsert, same key
+    index.delete("doc-7")                # tombstone: excluded from results
     keys, distances = index.query(query, k=10)
     index.export_index(path); HNSW.load_index(path)
+
+Mutation model: the ``SequentialBuilder`` is the canonical mutable host
+graph. Deletes are soft (a tombstone mask threaded through the device-side
+beam search — deleted ids stay traversable, hnswlib-style); updates are
+delete + reinsert under the same key. After the first query materialises a
+resident ``DeviceGraph`` (capacity-padded, fixed shapes), later mutations
+upload only the builder's dirty-row journal via ``apply_row_updates``
+instead of re-converting the whole graph (DESIGN.md §3).
 """
 from __future__ import annotations
 
 import json
 import os
-import tempfile
 from typing import Sequence
 
 import numpy as np
@@ -24,9 +34,10 @@ import numpy as np
 from repro.core import hnsw as jhnsw
 from repro.core import hnsw_build as build
 from repro.core.flat import FlatIndex
+from repro.core.index import VectorIndex
 
 
-class HNSW:
+class HNSW(VectorIndex):
     def __init__(self, distance_function: str = "cosine", *, M: int = 16,
                  ef_construction: int = 200, ef_search: int = 64,
                  seed: int = 0, use_bulk_build: bool = False):
@@ -38,30 +49,43 @@ class HNSW:
         self.ef_search = ef_search
         self.seed = seed
         self.use_bulk_build = use_bulk_build
-        self._keys: list[str] = []
+        self._keys: list[str] = []                 # node id -> key
+        self._key2id: dict[str, int] = {}          # live keys only
+        self._deleted = np.zeros(0, bool)          # tombstones, capacity-sized
         self._builder: build.SequentialBuilder | None = None
+        # compat only: external code reads `idx._graph or idx._builder.graph()`
         self._graph: build.HNSWGraph | None = None
         self._device_graph: jhnsw.DeviceGraph | None = None
+        self._deleted_dirty = False
 
-    # ------------------------------------------------------------------ api
+    # ------------------------------------------------------------ mutation
     def insert(self, key: str, value: Sequence[float]) -> None:
+        """Upsert one (key, vector); existing keys are updated in place."""
+        if key in self._key2id:
+            self.delete(key)
         v = np.asarray(value, np.float32)
         if self._builder is None:
             self._builder = build.SequentialBuilder(
                 v.shape[-1], M=self.M, ef_construction=self.ef_construction,
                 metric=self.metric, seed=self.seed)
-        self._builder.insert(v)
+        node = self._builder.insert(v)
+        assert node == len(self._keys)
         self._keys.append(key)
-        self._graph = self._device_graph = None
+        self._key2id[key] = node
 
     def bulk_insert(self, keys: Sequence[str], values) -> None:
         values = np.asarray(values, np.float32)
         assert len(keys) == len(values), "keys/values length mismatch"
         if self.use_bulk_build and self._builder is None:
-            self._graph = build.bulk_build(
+            g = build.bulk_build(
                 values, M=self.M, ef_construction=self.ef_construction,
                 metric=self.metric, seed=self.seed)
+            # adopt as mutable builder state so a LATER bulk_insert / insert
+            # appends instead of silently replacing the graph
+            self._builder = build.SequentialBuilder.from_graph(
+                g, ef_construction=self.ef_construction, seed=self.seed)
             self._keys = list(keys)
+            self._key2id = {k: i for i, k in enumerate(self._keys)}
             self._device_graph = None
             return
         for k, v in zip(keys, values):
@@ -69,15 +93,50 @@ class HNSW:
 
     bulkInsert = bulk_insert   # TS-parity alias
 
+    def update(self, key: str, value: Sequence[float]) -> None:
+        """Replace the vector of an existing key (delete + reinsert)."""
+        if key not in self._key2id:
+            raise KeyError(key)
+        self.insert(key, value)
+
+    def delete(self, key: str) -> None:
+        """Soft-delete: tombstone the row; it stays traversable but is
+        never returned from query/exact_query again."""
+        node = self._key2id.pop(key)               # KeyError if absent
+        self._ensure_tombstones()
+        self._deleted[node] = True
+        self._deleted_dirty = True
+
+    def _ensure_tombstones(self):
+        cap = self._builder.vectors.shape[0] if self._builder is not None else 0
+        if self._deleted.shape[0] < cap:
+            pad = np.zeros(cap - self._deleted.shape[0], bool)
+            self._deleted = np.concatenate([self._deleted, pad])
+
+    # ----------------------------------------------------- device residency
     def _dg(self) -> jhnsw.DeviceGraph:
-        if self._graph is None:
-            if self._builder is None:
-                raise ValueError("index is empty")
-            self._graph = self._builder.graph()
-        if self._device_graph is None:
-            self._device_graph = jhnsw.to_device_graph(self._graph)
+        """Resident device graph, synced incrementally when possible."""
+        if self._builder is None:
+            raise ValueError("index is empty")
+        b = self._builder
+        self._ensure_tombstones()
+        g = b.graph_full_capacity(b.max_level_cap)   # fixed [12, cap, M] upper
+        dg = self._device_graph
+        if dg is None or dg.vectors.shape != g.vectors.shape:
+            # first upload, or capacity growth: full conversion
+            self._device_graph = jhnsw.to_device_graph(g, self._deleted)
+            b.journal.clear()
+            self._deleted_dirty = False
+        elif b.journal or self._deleted_dirty or dg.max_level != g.max_level:
+            # incremental: only dirty rows travel to the device
+            self._device_graph = jhnsw.apply_row_updates(
+                dg, g, b.journal,
+                self._deleted if self._deleted_dirty else None)
+            b.journal.clear()
+            self._deleted_dirty = False
         return self._device_graph
 
+    # --------------------------------------------------------------- query
     def query(self, query, k: int = 10, ef: int | None = None):
         """-> (keys, distances); batched queries return lists of lists."""
         q = np.asarray(query, np.float32)
@@ -91,52 +150,82 @@ class HNSW:
         return keys, dists
 
     def exact_query(self, query, k: int = 10):
-        """Brute-force oracle over the same vectors."""
-        g = self._graph or self._builder.graph()
-        flat = FlatIndex(vectors=np.asarray(g.vectors), metric=self.metric)
-        d, i = flat.query(query, k)
-        return np.asarray(i), np.asarray(d)
+        """Brute-force oracle over the same LIVE vectors -> (keys, dists)."""
+        if self._builder is None:
+            raise ValueError("index is empty")
+        self._ensure_tombstones()
+        n = self._builder.n
+        live = np.flatnonzero(~self._deleted[:n])
+        if live.size == 0:
+            raise ValueError("index is empty")
+        flat = FlatIndex(vectors=np.asarray(self._builder.vectors[live]),
+                         metric=self.metric)
+        q = np.asarray(query, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None]
+        d, i = flat.query(q, min(k, live.size))
+        d, i = np.asarray(d), np.asarray(i)
+        keys = [[self._keys[int(live[j])] for j in row] for row in i]
+        if squeeze:
+            return keys[0], d[0]
+        return keys, d
 
     @property
     def size(self) -> int:
-        if self._graph is not None:
-            return self._graph.n
-        return self._builder.n if self._builder else 0
+        return len(self._key2id)
+
+    def keys(self) -> list[str]:
+        n = self._builder.n if self._builder is not None else 0
+        self._ensure_tombstones()
+        return [self._keys[i] for i in range(n) if not self._deleted[i]]
 
     # ------------------------------------------------------- persistence
-    def export_index(self, path: str) -> None:
-        g = self._graph or (self._builder.graph() if self._builder else None)
-        if g is None:
+    def export(self, path: str) -> None:
+        if self._builder is None:
             raise ValueError("index is empty")
+        g = self._builder.graph()
+        self._ensure_tombstones()
         meta = {
             "metric": self.metric, "M": self.M,
             "ef_construction": self.ef_construction,
             "ef_search": self.ef_search,
             "entry": int(g.entry), "max_level": int(g.max_level),
-            "n": int(g.n), "keys": self._keys,
+            "n": int(g.n), "keys": self._keys[: g.n],
         }
         tmp = path + ".tmp.npz"          # atomic: write sidecar, then rename
         np.savez_compressed(tmp[:-4],    # np.savez appends the .npz itself
                             vectors=g.vectors, neighbors0=g.neighbors0,
                             upper=g.upper, levels=g.levels,
+                            deleted=self._deleted[: g.n],
                             meta=np.frombuffer(
                                 json.dumps(meta).encode(), dtype=np.uint8))
         os.replace(tmp, path)
 
-    exportIndex = export_index
+    export_index = export
+    exportIndex = export
 
     @classmethod
-    def load_index(cls, path: str) -> "HNSW":
+    def load(cls, path: str) -> "HNSW":
         z = np.load(path, allow_pickle=False)
         meta = json.loads(bytes(z["meta"]).decode())
         idx = cls(distance_function=meta["metric"], M=meta["M"],
                   ef_construction=meta["ef_construction"],
                   ef_search=meta["ef_search"])
-        idx._graph = build.HNSWGraph(
+        g = build.HNSWGraph(
             vectors=z["vectors"], neighbors0=z["neighbors0"],
             upper=z["upper"], levels=z["levels"], entry=meta["entry"],
             max_level=meta["max_level"], metric=meta["metric"], n=meta["n"])
+        idx._builder = build.SequentialBuilder.from_graph(
+            g, ef_construction=meta["ef_construction"])
         idx._keys = list(meta["keys"])
+        deleted = (np.asarray(z["deleted"], bool) if "deleted" in z.files
+                   else np.zeros(meta["n"], bool))
+        idx._ensure_tombstones()
+        idx._deleted[: meta["n"]] = deleted
+        idx._key2id = {k: i for i, k in enumerate(idx._keys)
+                       if not idx._deleted[i]}
         return idx
 
-    loadIndex = load_index
+    load_index = load
+    loadIndex = load

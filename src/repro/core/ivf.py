@@ -12,12 +12,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hnsw_build import normalize_rows
+from repro.core.index import VectorIndex
 from repro.kernels import ops
 
 
@@ -111,3 +115,174 @@ def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
     if squeeze:
         return ids[0], dists[0]
     return ids, dists
+
+
+class IVFVectorIndex(VectorIndex):
+    """Keyed mutable IVF backend (DESIGN.md §1/§4).
+
+    Centroids are trained once (k-means over the rows present at the first
+    query); later inserts are assigned to their nearest existing centroid —
+    classic IVF ``add`` semantics. Deletes drop the row from its inverted
+    list at the next device pack (no tombstone needed in the search path
+    because packing already excludes dead rows). The packed device index is
+    rebuilt lazily after mutations.
+    """
+
+    def __init__(self, *, metric: str = "cosine", dim: int | None = None,
+                 nlist: int = 64, nprobe: int = 8, iters: int = 8,
+                 seed: int = 0):
+        if metric not in ("cosine", "ip", "l2"):
+            raise ValueError(f"unknown metric {metric!r}")
+        self.metric = metric
+        self.dim = dim
+        self.nlist = nlist
+        self.nprobe = nprobe
+        self.iters = iters
+        self.seed = seed
+        self._vecs = np.zeros((0, dim or 0), np.float32)
+        self._keys: list[str] = []
+        self._key2row: dict[str, int] = {}
+        self._alive = np.zeros(0, bool)
+        self._centroids: np.ndarray | None = None   # trained lazily
+        self._idx: IVFIndex | None = None           # packed device index
+        self._live_rows: np.ndarray | None = None
+
+    # ------------------------------------------------------------ mutation
+    def _append(self, key: str, v: np.ndarray):
+        if key in self._key2row:
+            self._alive[self._key2row[key]] = False
+        row = len(self._keys)
+        self._vecs = np.concatenate([self._vecs, v[None]])
+        self._keys.append(key)
+        self._alive = np.concatenate([self._alive, np.ones(1, bool)])
+        self._key2row[key] = row
+        self._idx = None
+
+    def insert(self, key: str, value: Sequence[float]) -> None:
+        v = np.asarray(value, np.float32).reshape(-1)
+        if self.metric == "cosine":
+            v = v / max(float(np.linalg.norm(v)), 1e-12)
+        if self.dim is None:
+            self.dim = v.shape[0]
+            self._vecs = np.zeros((0, self.dim), np.float32)
+        self._append(key, v)
+
+    def bulk_insert(self, keys: Sequence[str], values) -> None:
+        values = np.asarray(values, np.float32)
+        if len(keys) != len(values):
+            raise ValueError("keys/values length mismatch")
+        if self.metric == "cosine":
+            values = normalize_rows(values)
+        for key in keys:
+            if key in self._key2row:
+                self._alive[self._key2row[key]] = False
+        if self.dim is None:
+            self.dim = values.shape[1]
+            self._vecs = np.zeros((0, self.dim), np.float32)
+        base = len(self._keys)
+        self._vecs = np.concatenate([self._vecs, values])
+        self._keys.extend(keys)
+        self._alive = np.concatenate([self._alive, np.ones(len(keys), bool)])
+        for j, key in enumerate(keys):
+            self._key2row[key] = base + j
+        self._idx = None
+
+    def update(self, key: str, value: Sequence[float]) -> None:
+        if key not in self._key2row:
+            raise KeyError(key)
+        self.insert(key, value)
+
+    def delete(self, key: str) -> None:
+        row = self._key2row.pop(key)
+        self._alive[row] = False
+        self._idx = None
+
+    # --------------------------------------------------------------- query
+    def _pack(self) -> IVFIndex:
+        """(Re)build the padded device lists over live rows only."""
+        if self._idx is not None:
+            return self._idx
+        live = np.flatnonzero(self._alive)
+        if live.size == 0:
+            raise ValueError("index is empty")
+        self._live_rows = live
+        v = self._vecs[live]
+        nlist = min(self.nlist, live.size)
+        if self._centroids is None or self._centroids.shape[0] != nlist:
+            cent, assign = kmeans(jnp.asarray(v), nlist, self.iters, self.seed)
+            self._centroids = np.asarray(cent)
+            assign = np.asarray(assign)
+        else:
+            cent = jnp.asarray(self._centroids)
+            d = (np.sum(v * v, 1)[:, None] - 2 * v @ self._centroids.T
+                 + np.sum(self._centroids ** 2, 1)[None, :])
+            assign = np.argmin(d, 1)
+        counts = np.bincount(assign, minlength=nlist)
+        cap = max(int(counts.max()), 1)
+        lists = np.full((nlist, cap), -1, np.int32)
+        cursor = np.zeros(nlist, np.int64)
+        for i, a in enumerate(assign):
+            lists[a, cursor[a]] = i
+            cursor[a] += 1
+        self._idx = IVFIndex(vectors=jnp.asarray(v), centroids=jnp.asarray(cent),
+                             lists=jnp.asarray(lists), metric=self.metric)
+        return self._idx
+
+    def query(self, query, k: int = 10, nprobe: int | None = None):
+        idx = self._pack()
+        q = np.asarray(query, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None]
+        ids, d = search_ivf(idx, q, k=min(k, idx.n),
+                            nprobe=nprobe or self.nprobe)
+        ids, d = np.asarray(ids), np.asarray(d)
+        from repro.core.flat import _pad_results
+        keys, d = _pad_results(
+            [[self._keys[int(self._live_rows[j])] if j >= 0 else None
+              for j in row] for row in ids], d, k)
+        if squeeze:
+            return keys[0], d[0]
+        return keys, d
+
+    def exact_query(self, query, k: int = 10):
+        idx = self._pack()
+        # nprobe = nlist probes every list -> exact over the live set
+        return self.query(query, k, nprobe=idx.centroids.shape[0])
+
+    # --------------------------------------------------------- persistence
+    def export(self, path: str) -> None:
+        if not self._keys:
+            raise ValueError("index is empty")
+        meta = {"metric": self.metric, "dim": self.dim, "nlist": self.nlist,
+                "nprobe": self.nprobe, "keys": self._keys}
+        tmp = path + ".tmp.npz"
+        cent = (self._centroids if self._centroids is not None
+                else np.zeros((0, self.dim), np.float32))
+        np.savez_compressed(tmp[:-4], vectors=self._vecs, alive=self._alive,
+                            centroids=cent,
+                            meta=np.frombuffer(json.dumps(meta).encode(),
+                                               dtype=np.uint8))
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "IVFVectorIndex":
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(bytes(z["meta"]).decode())
+        idx = cls(metric=meta["metric"], dim=meta["dim"],
+                  nlist=meta["nlist"], nprobe=meta["nprobe"])
+        idx._vecs = np.asarray(z["vectors"], np.float32)
+        idx._alive = np.asarray(z["alive"], bool)
+        idx._keys = list(meta["keys"])
+        idx._key2row = {k: i for i, k in enumerate(idx._keys)
+                        if idx._alive[i]}
+        cent = np.asarray(z["centroids"], np.float32)
+        idx._centroids = cent if cent.size else None
+        return idx
+
+    @property
+    def size(self) -> int:
+        return len(self._key2row)
+
+    def keys(self) -> list[str]:
+        return [k for i, k in enumerate(self._keys) if self._alive[i]]

@@ -17,10 +17,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.hnsw_build import HNSWGraph
+from repro.core.hnsw_build import HNSWGraph, _dist
+from repro.core.index import VectorIndex
 
 # paper: "p is automatically determined by the vector dimension".  We model
 # the fast tier granting a fixed byte budget per transaction (1 MiB, f32).
@@ -115,6 +117,166 @@ def graph_neighbor_fn(g: HNSWGraph, layer: int):
         return row[row >= 0]
 
     return fn
+
+
+class TieredIndex(VectorIndex):
+    """``VectorIndex`` backend whose query path runs through the two-tier
+    store (DESIGN.md §4): graph topology + keys live in the fast tier, the
+    vector payload in the slow tier, and every search pays (and counts)
+    slow-tier transactions with graph-aware prefetching — the queryable
+    version of the §3.2 accounting model.
+
+    Mutations delegate to an inner HNSW index (tombstones included); any
+    mutation invalidates the fast-tier cache, so the next query re-warms it
+    against the current graph. ``stats`` accumulates TierStats across
+    queries between mutations.
+    """
+
+    def __init__(self, *, metric: str = "cosine", M: int = 16,
+                 ef_construction: int = 200, ef_search: int = 64,
+                 cache_rows: int = 1024, prefetch_p: int | None = None,
+                 seed: int = 0, use_bulk_build: bool = False):
+        from repro.core.interface import HNSW   # lazy: avoid import cycle
+        self.inner = HNSW(distance_function=metric, M=M,
+                          ef_construction=ef_construction,
+                          ef_search=ef_search, seed=seed,
+                          use_bulk_build=use_bulk_build)
+        self.metric = metric
+        self.ef_search = ef_search
+        self.cache_rows = cache_rows
+        self.prefetch_p = prefetch_p
+        self._store: TieredVectorStore | None = None
+        self._g: HNSWGraph | None = None
+
+    # ------------------------------------------------------------ mutation
+    def _invalidate(self):
+        self._store = None
+        self._g = None
+
+    def insert(self, key: str, value: Sequence[float]) -> None:
+        self.inner.insert(key, value)
+        self._invalidate()
+
+    def bulk_insert(self, keys: Sequence[str], values) -> None:
+        self.inner.bulk_insert(keys, values)
+        self._invalidate()
+
+    def update(self, key: str, value: Sequence[float]) -> None:
+        self.inner.update(key, value)
+        self._invalidate()
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+        self._invalidate()
+
+    # --------------------------------------------------------------- query
+    def _tiers(self) -> tuple[HNSWGraph, "TieredVectorStore"]:
+        if self.inner._builder is None:
+            raise ValueError("index is empty")
+        if self._g is None:
+            self._g = self.inner._builder.graph()
+            self._store = TieredVectorStore(self._g.vectors,
+                                            cache_rows=self.cache_rows,
+                                            prefetch_p=self.prefetch_p)
+        return self._g, self._store
+
+    @property
+    def stats(self) -> TierStats:
+        return self._tiers()[1].stats
+
+    def query(self, query, k: int = 10, ef: int | None = None):
+        g, store = self._tiers()
+        self.inner._ensure_tombstones()
+        deleted = self.inner._deleted
+        ef = max(ef or self.ef_search, k)
+        q = np.asarray(query, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None]
+        out_keys, out_d = [], []
+        for qv in q:
+            ids, dists = _tiered_beam_search(g, deleted, store, qv, k, ef)
+            out_keys.append([self.inner._keys[i] if i >= 0 else None
+                             for i in ids])
+            out_d.append(dists)
+        out_d = np.asarray(out_d, np.float32)
+        if squeeze:
+            return out_keys[0], out_d[0]
+        return out_keys, out_d
+
+    def exact_query(self, query, k: int = 10):
+        return self.inner.exact_query(query, k)
+
+    # --------------------------------------------------------- persistence
+    def export(self, path: str) -> None:
+        self.inner.export(path)
+
+    @classmethod
+    def load(cls, path: str, **kw) -> "TieredIndex":
+        from repro.core.interface import HNSW
+        inner = HNSW.load(path)
+        idx = cls(metric=inner.metric, M=inner.M,
+                  ef_construction=inner.ef_construction,
+                  ef_search=inner.ef_search, **kw)
+        idx.inner = inner
+        return idx
+
+    @property
+    def size(self) -> int:
+        return self.inner.size
+
+    def keys(self) -> list[str]:
+        return self.inner.keys()
+
+
+def _tiered_beam_search(g: HNSWGraph, deleted: np.ndarray,
+                        store: "TieredVectorStore", q: np.ndarray, k: int,
+                        ef: int) -> tuple[list[int], list[float]]:
+    """Host-side HNSW search reading vectors exclusively through the tiered
+    store (greedy upper-layer descent + ef-beam on layer 0). Tombstoned ids
+    are traversable but excluded from the returned top-k."""
+    if g.metric == "cosine":
+        q = q / max(float(np.linalg.norm(q)), 1e-12)
+    ep = int(g.entry)
+    d_ep = float(_dist(g.metric, q, store.read([ep],
+                                               graph_neighbor_fn(g, 0)))[0])
+    # greedy descent through the upper layers
+    for layer in range(g.max_level, 0, -1):
+        nb_fn = graph_neighbor_fn(g, layer)
+        improved = True
+        while improved:
+            improved = False
+            nbrs = [int(x) for x in nb_fn(ep)]
+            if not nbrs:
+                break
+            d = _dist(g.metric, q, store.read(nbrs, nb_fn))
+            j = int(np.argmin(d))
+            if float(d[j]) < d_ep:
+                ep, d_ep = nbrs[j], float(d[j])
+                improved = True
+    # ef-beam best-first search on layer 0
+    nb_fn = graph_neighbor_fn(g, 0)
+    beam = [(d_ep, ep)]
+    visited = {ep}
+    expanded: set[int] = set()
+    for _ in range(ef):
+        cands = [(d, i) for d, i in beam if i not in expanded]
+        if not cands:
+            break
+        _, cur = min(cands)
+        expanded.add(cur)
+        nbrs = [int(x) for x in g.neighbors0[cur] if x >= 0
+                and int(x) not in visited]
+        if not nbrs:
+            continue
+        visited.update(nbrs)
+        d = _dist(g.metric, q, store.read(nbrs, nb_fn))
+        beam.extend(zip(d.tolist(), nbrs))
+        beam = sorted(beam)[:ef]
+    live = [(d, i) for d, i in beam if not deleted[i]][:k]
+    ids = [i for _, i in live] + [-1] * (k - len(live))
+    dists = [d for d, _ in live] + [float(np.float32(3e38))] * (k - len(live))
+    return ids, dists
 
 
 def simulate_search_traffic(g: HNSWGraph, queries: np.ndarray, *, ef: int,

@@ -84,6 +84,9 @@ class DocumentStore:
     def get(self, key: str) -> Document:
         return self._docs[key]
 
+    def remove(self, key: str):
+        del self._docs[key]
+
     def __len__(self):
         return len(self._docs)
 

@@ -17,7 +17,7 @@ from repro.configs import get_smoke_config
 from repro.data.corpus import BUILTIN_CORPUS
 from repro.models import transformer as tf
 from repro.serve.engine import ServeEngine
-from repro.serve.rag import RAGPipeline, lm_generate_fn
+from repro.serve.rag import RAGPipeline
 from repro.utils import logger
 
 
@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--rag", action="store_true")
+    ap.add_argument("--index", default="hnsw",
+                    choices=("flat", "ivf", "hnsw", "tiered"),
+                    help="VectorIndex backend for the RAG retriever")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -38,18 +41,20 @@ def main():
                          dtype=jnp.float32)
 
     if args.rag:
-        rag = RAGPipeline(generate_fn=lm_generate_fn(engine, cfg.vocab, 96))
+        rag = RAGPipeline(index_kind=args.index)
         rag.add_documents(BUILTIN_CORPUS)
+        queries = [["how does hnsw search work",
+                    "why is on device retrieval private",
+                    "what does efConstruction control"][i % 3]
+                   for i in range(args.requests)]
         t0 = time.perf_counter()
-        for i in range(args.requests):
-            q = ["how does hnsw search work",
-                 "why is on device retrieval private",
-                 "what does efConstruction control"][i % 3]
-            out = rag.answer(q, k=3)
-            logger.info(f"req {i}: retrieved {[d.key for d in out['docs']]}")
+        outs = engine.generate_rag(rag, queries, k=3,
+                                   max_new_tokens=args.max_new)
         dt = time.perf_counter() - t0
-        logger.info(f"RAG: {args.requests} requests in {dt:.1f}s "
-                    f"({args.requests / dt:.2f} req/s)")
+        for i, out in enumerate(outs):
+            logger.info(f"req {i}: retrieved {[d.key for d in out['docs']]}")
+        logger.info(f"RAG[{args.index}]: {args.requests} requests in {dt:.1f}s "
+                    f"({args.requests / dt:.2f} req/s, continuous batching)")
         return
 
     rng = np.random.default_rng(args.seed)

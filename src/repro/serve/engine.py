@@ -134,3 +134,26 @@ class ServeEngine:
         reqs = [self.submit(p, max_new_tokens) for p in prompts]
         self.run_until_drained()
         return [r.out_tokens for r in reqs]
+
+    # ------------------------------------------------------------ RAG path
+    def generate_rag(self, pipeline, queries: list[str], *, k: int = 3,
+                     max_new_tokens: int = 16) -> list[dict]:
+        """Serve RAG requests through the continuous-batching engine.
+
+        ``pipeline`` is a RAGPipeline over any VectorIndex backend: all
+        retrievals run first (on-device ANN), then every augmented prompt
+        is submitted at once so the slot scheduler batches the generation —
+        instead of the one-request-at-a-time ``pipeline.answer`` loop.
+        """
+        from repro.data.corpus import encode_ids
+        retrieved = [pipeline.retrieve(q, k) for q in queries]
+        prompts = [pipeline.build_prompt(q, docs)
+                   for q, docs in zip(queries, retrieved)]
+        reqs = []
+        for p in prompts:
+            ids = encode_ids(p, self.cfg.vocab, self.max_len - 1)
+            reqs.append(self.submit(ids[ids > 0], max_new_tokens))
+        self.run_until_drained()
+        return [{"query": q, "docs": docs, "prompt": p,
+                 "response": " ".join(f"<{t}>" for t in r.out_tokens)}
+                for q, docs, p, r in zip(queries, retrieved, prompts, reqs)]

@@ -1,10 +1,14 @@
 """RAG pipeline — the paper's end-to-end loop (C4, §2 RAG Playground):
 
-    encode(query) -> k-NN retrieve (HNSW, on-device) -> fill the
+    encode(query) -> k-NN retrieve (any VectorIndex, on-device) -> fill the
     {{user}}/{{context}} prompt template -> generate with the LM.
 
 Everything stays on the "device" (this process / the pod): no external
-retrieval service — the privacy property the paper is about.
+retrieval service — the privacy property the paper is about. The retriever
+is any ``VectorIndex`` backend (flat / ivf / hnsw / tiered; DESIGN.md §1),
+so the pipeline also carries the protocol's CRUD: documents can be added,
+re-embedded (update), and retracted (delete) after indexing — deletion is
+the first-class privacy operation.
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.interface import HNSW
+from repro.core.index import VectorIndex, make_index
 from repro.data.corpus import DocumentStore, HashingEncoder, encode_ids
 
 DEFAULT_TEMPLATE = (
@@ -33,14 +37,16 @@ class RetrievedDoc:
 
 class RAGPipeline:
     def __init__(self, *, encoder: HashingEncoder | None = None,
-                 index: HNSW | None = None,
+                 index: VectorIndex | None = None,
+                 index_kind: str = "hnsw",
                  store: DocumentStore | None = None,
                  template: str = DEFAULT_TEMPLATE,
                  generate_fn: Callable[[str], str] | None = None,
                  M: int = 16, ef_construction: int = 100):
         self.encoder = encoder or HashingEncoder()
-        self.index = index or HNSW(distance_function="cosine", M=M,
-                                   ef_construction=ef_construction)
+        self.index = index if index is not None else make_index(
+            index_kind, metric="cosine", dim=self.encoder.dim, M=M,
+            ef_construction=ef_construction)
         self.store = store or DocumentStore()
         self.template = template
         self.generate_fn = generate_fn
@@ -55,8 +61,25 @@ class RAGPipeline:
         for k, t in docs:
             self.store.add(k, t)
 
+    def add_document(self, key: str, text: str):
+        self.index.insert(key, self.encoder.encode(text)[0])
+        self.store.add(key, text)
+
+    def update_document(self, key: str, text: str):
+        """Re-embed + replace an indexed document in place."""
+        self.index.update(key, self.encoder.encode(text)[0])
+        self.store.add(key, text)
+
+    def delete_document(self, key: str):
+        """Retract a document: tombstoned in the index, purged from the
+        store — it can never be retrieved into a prompt again."""
+        self.index.delete(key)
+        self.store.remove(key)
+
     # ------------------------------------------------------------ retrieve
     def retrieve(self, query: str, k: int = 3) -> list[RetrievedDoc]:
+        if self.index.size == 0:           # everything retracted: no context
+            return []
         qv = self.encoder.encode(query)[0]
         keys, dists = self.index.query(qv, k=min(k, self.index.size))
         return [RetrievedDoc(key, self.store.get(key).text, float(d))

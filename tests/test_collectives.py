@@ -1,7 +1,7 @@
 """Properties of the collective building blocks (single-device math)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @given(n_shards=st.integers(2, 6), per=st.integers(3, 20),

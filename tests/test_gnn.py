@@ -3,7 +3,7 @@ neighbor sampler properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.models import gnn as gnn_lib

@@ -38,6 +38,27 @@ def test_queue_overflow_drains(setup):
     assert not eng.queue and all(a is None for a in eng.active)
 
 
+def test_engine_rag_path_over_vector_index(setup):
+    """The engine's RAG path: retrieval via any VectorIndex backend, then
+    batched generation through the slot scheduler."""
+    from repro.data.corpus import BUILTIN_CORPUS
+    from repro.serve.rag import RAGPipeline
+
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, slots=2, max_len=96, dtype=jnp.float32)
+    rag = RAGPipeline(index_kind="flat")
+    rag.add_documents(BUILTIN_CORPUS)
+    outs = eng.generate_rag(rag, ["how does hnsw search work",
+                                  "why is on device retrieval private"],
+                            k=2, max_new_tokens=4)
+    assert len(outs) == 2
+    for out in outs:
+        assert len(out["docs"]) == 2
+        assert "{{context}}" not in out["prompt"]
+        assert out["response"]
+    assert outs[1]["docs"][0].key.startswith("priv")
+
+
 def test_eos_terminates_early(setup):
     cfg, params = setup
     eng = ServeEngine(params, cfg, slots=1, max_len=64, dtype=jnp.float32)
