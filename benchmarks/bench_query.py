@@ -1,9 +1,18 @@
-"""Paper §5 query claim ("real time at 1M") + the §3.1 recall/ef tradeoff.
+"""Paper §5 query claim ("real time at 1M") + the §3.1 recall/ef tradeoff
++ the batched retrieval serving layer's B-sweep (DESIGN.md §6).
+
+Rows:
+  hnsw_query_n{N}_ef{EF}    lock-step batched search latency + recall@10
+  flat_query_n{N}           exact scan latency (the brute-force bound)
+  engine_B{1,8,32,128}      RetrievalEngine per-query latency/QPS at each
+                            bucket size (cache off — device throughput)
 
 Measures batched search latency + recall@10 vs efSearch through the
 unified ``VectorIndex`` protocol (hnsw backend), and the exact flat-index
-scan latency (the brute-force bound), at CPU-feasible scale.
+scan latency, at CPU-feasible scale. Smoke mode (REPRO_BENCH_SMOKE=1)
+shrinks sizes for CI.
 """
+import os
 import time
 
 import jax
@@ -12,7 +21,10 @@ import numpy as np
 from repro.core import make_index
 from repro.data.synthetic import make_corpus
 from repro.kernels import ref
+from repro.serve.retrieval import RetrievalEngine
 import jax.numpy as jnp
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def _key_recall(found_keys, true_i) -> float:
@@ -24,12 +36,20 @@ def _key_recall(found_keys, true_i) -> float:
 
 
 def run(rows: list):
-    n, dim, q_n = 20_000, 64, 64
+    # q_n stays at its historical value so hnsw_query_*/flat_query_* rows
+    # keep measuring the same batch shape PR-over-PR; the engine sweep
+    # below draws its own workload sized to cover the largest bucket.
+    n, dim, q_n = (2_000, 32, 32) if SMOKE else (20_000, 64, 64)
+    eng_n = 32 if SMOKE else 128
+    reps = 1 if SMOKE else 3
     data = make_corpus(n, dim, seed=0)
     rng = np.random.default_rng(1)
-    # realistic retrieval: queries near the corpus manifold (perturbed rows)
+    # realistic retrieval: queries near the corpus manifold (perturbed
+    # rows); drawn exactly as in earlier PRs so recall rows are comparable
     queries = (data[rng.integers(0, n, q_n)]
                + 0.15 * rng.normal(size=(q_n, dim)).astype(np.float32))
+    eng_queries = (data[rng.integers(0, n, eng_n)]
+                   + 0.15 * rng.normal(size=(eng_n, dim)).astype(np.float32))
     keys = [f"d{i}" for i in range(n)]
     idx = make_index("hnsw", metric="cosine", M=8, ef_construction=60)
     idx.bulk_insert(keys, data)
@@ -38,14 +58,14 @@ def run(rows: list):
     _, true_i = ref.distance_topk_ref(jnp.asarray(datan), jnp.asarray(qn), 10)
     true_i = np.asarray(true_i)
 
-    for ef in (16, 32, 64, 128):
+    for ef in (16, 64) if SMOKE else (16, 32, 64, 128):
         found, _ = idx.query(queries, k=10, ef=ef)        # compile + sync
         t0 = time.perf_counter()
-        for _ in range(3):
+        for _ in range(reps):
             found, d = idx.query(queries, k=10, ef=ef)
             jax.block_until_ready(d) if hasattr(d, "block_until_ready") \
                 else None
-        us = (time.perf_counter() - t0) / 3 / q_n * 1e6
+        us = (time.perf_counter() - t0) / reps / q_n * 1e6
         rec = _key_recall(found, true_i)
         rows.append((f"hnsw_query_n{n}_ef{ef}", us, f"recall@10={rec:.3f}"))
 
@@ -53,8 +73,22 @@ def run(rows: list):
     flat.bulk_insert(keys, data)
     flat.query(queries, k=10)                             # compile + pack
     t0 = time.perf_counter()
-    for _ in range(3):
+    for _ in range(reps):
         found, _ = flat.query(queries, k=10)
-    us = (time.perf_counter() - t0) / 3 / q_n * 1e6
+    us = (time.perf_counter() - t0) / reps / q_n * 1e6
     rows.append((f"flat_query_n{n}", us,
                  f"exact recall@10={_key_recall(found, true_i):.3f}"))
+
+    # ---- RetrievalEngine bucket sweep: per-query cost vs batch size.
+    # Cache off so this is pure coalesced device throughput; the cached
+    # path is measured in bench_serve (retrieval_B32_cached). eng_n covers
+    # the largest bucket so every row measures its labelled batch shape.
+    for B in (1, 8, 32) if SMOKE else (1, 8, 32, 128):
+        eng = RetrievalEngine(idx, max_batch=B, cache_size=0)
+        eng.retrieve(eng_queries[:B], k=10)               # warm this bucket
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for lo in range(0, eng_n, B):
+                eng.retrieve(eng_queries[lo:lo + B], k=10)
+        us = (time.perf_counter() - t0) / reps / eng_n * 1e6
+        rows.append((f"engine_B{B}", us, f"qps={1e6 / us:.0f}"))

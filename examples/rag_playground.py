@@ -52,6 +52,11 @@ def main(interactive: bool = False, index: str = "hnsw"):
 
     for q in QUERIES:
         ask(q)
+    ask(QUERIES[0])                    # repeat: served from the LRU cache
+    s = rag.retriever.stats.as_dict()
+    print(f"retrieval: {s['searches']} device dispatches for "
+          f"{s['requests']} queries, cache hit rate {s['hit_rate']:.2f} "
+          f"(DESIGN.md §6)\n")
 
     if interactive:
         while True:

@@ -1,6 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the one command CI and contributors run.
 #   scripts/run_tests.sh [extra pytest args]
+#   scripts/run_tests.sh --smoke   # tiny bench_query/bench_serve canary:
+#                                  # catches perf-path breakage (shape
+#                                  # regressions, lost batching, cache
+#                                  # misses) without a full benchmark run
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "--smoke" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    exec python -m benchmarks.run --only query,serve --smoke "$@"
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -100,6 +100,7 @@ class FlatVectorIndex(VectorIndex):
         self._alive = np.concatenate([self._alive, np.ones(1, bool)])
         self._key2row[key] = row
         self._flat = None
+        self._bump_epoch()
 
     def bulk_insert(self, keys: Sequence[str], values) -> None:
         values = np.asarray(values, np.float32)
@@ -118,6 +119,7 @@ class FlatVectorIndex(VectorIndex):
         for j, key in enumerate(keys):
             self._key2row[key] = base + j
         self._flat = None
+        self._bump_epoch()
 
     def update(self, key: str, value: Sequence[float]) -> None:
         if key not in self._key2row:
@@ -128,6 +130,7 @@ class FlatVectorIndex(VectorIndex):
         row = self._key2row.pop(key)               # KeyError if absent
         self._alive[row] = False
         self._flat = None
+        self._bump_epoch()
 
     # --------------------------------------------------------------- query
     def _device(self) -> FlatIndex:
@@ -139,22 +142,20 @@ class FlatVectorIndex(VectorIndex):
             self._flat = FlatIndex.build(self._vecs[live], metric=self.metric)
         return self._flat
 
-    def query(self, query, k: int = 10, **kw):
+    def query_batch(self, queries, k: int = 10, **kw):
+        """One device dispatch for the whole [B, D] batch (exact top-k)."""
         flat = self._device()
-        q = np.asarray(query, np.float32)
-        squeeze = q.ndim == 1
-        if squeeze:
-            q = q[None]
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"query_batch expects [B, D], got {q.shape}")
         d, i = flat.query(q, min(k, flat.n))
         d, i = np.asarray(d), np.asarray(i)
-        keys, d = _pad_results(
+        return _pad_results(
             [[self._keys[int(self._live_rows[j])] for j in row] for row in i],
             d, k)
-        if squeeze:
-            return keys[0], d[0]
-        return keys, d
 
-    exact_query = query                    # flat IS the brute-force oracle
+    def exact_query(self, query, k: int = 10):
+        return self.query(query, k)        # flat IS the brute-force oracle
 
     # --------------------------------------------------------- persistence
     def export(self, path: str) -> None:

@@ -12,8 +12,10 @@ implements the same keyed CRUD + query contract:
     idx.update("doc-1", new_vec)        # re-embed in place
     idx.delete("doc-0")                 # retract (tombstone, never returned)
     keys, dists = idx.query(q, k=10)    # ANN search
+    keys, dists = idx.query_batch(Q, k) # batched ANN: [B,D] -> lists of lists
     keys, dists = idx.exact_query(q, k) # brute-force oracle, same live set
     idx.export(path); Idx.load(path)    # tombstones + keys round-trip
+    idx.mutation_epoch                  # bumped by every mutation (caching)
 
 Design notes (DESIGN.md §1):
   * keys are caller-owned strings; inserting an existing key is an update;
@@ -22,7 +24,14 @@ Design notes (DESIGN.md §1):
     traversable, hnswlib-style; see DESIGN.md §3);
   * ``size`` counts live (non-deleted) keys;
   * ``query``/``exact_query`` return ``(keys, dists)``; batched queries
-    return lists of lists. Missing slots (k > live) come back as ``None``.
+    return lists of lists. Missing slots (k > live) come back as ``None``;
+  * ``query_batch`` is the serving-layer entry point: input is always
+    [B, D], output is always batched (lists of lists), even at B=1 — no
+    squeeze ambiguity. All four backends run it as ONE device dispatch
+    (tiered, whose search is the host-side accounting model, loops);
+  * every mutation bumps ``mutation_epoch``. The epoch is what lets a
+    result cache (serve/retrieval.py) guarantee a retracted document is
+    never served from a stale entry — the privacy property (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -36,6 +45,21 @@ class VectorIndex(abc.ABC):
     """Keyed, mutable ANN index. All four backends implement this."""
 
     metric: str
+    _epoch: int = 0        # mutation counter; instance attr on first bump
+
+    # -------------------------------------------------------------- epoch
+    @property
+    def mutation_epoch(self) -> int:
+        """Monotonic counter bumped by every insert/update/delete.
+
+        Consumers that cache query results key their validity on this
+        value: any mutation — in particular ``delete``, the privacy
+        operation — invalidates everything cached under the old epoch.
+        """
+        return self._epoch
+
+    def _bump_epoch(self) -> None:
+        self._epoch = self._epoch + 1
 
     # ------------------------------------------------------------ mutation
     @abc.abstractmethod
@@ -59,9 +83,26 @@ class VectorIndex(abc.ABC):
         """Soft-delete a key: never returned again. KeyError if absent."""
 
     # --------------------------------------------------------------- query
-    @abc.abstractmethod
     def query(self, query, k: int = 10, **kw):
-        """ANN top-k -> (keys, dists); batched input -> lists of lists."""
+        """ANN top-k -> (keys, dists); a 1-D query returns one row, a
+        [B, D] batch returns lists of lists. Thin squeeze wrapper over
+        :meth:`query_batch` — shared by every backend."""
+        q = np.asarray(query, np.float32)
+        if q.ndim == 1:
+            keys, d = self.query_batch(q[None], k, **kw)
+            return keys[0], d[0]
+        return self.query_batch(q, k, **kw)
+
+    @abc.abstractmethod
+    def query_batch(self, queries, k: int = 10, **kw):
+        """Batched ANN search: queries [B, D] -> (keys, dists) where keys
+        is a list of B lists of k key-or-None and dists is [B, k].
+
+        Unlike ``query``, the result is batched even for B=1 — this is the
+        shape contract the serving layer (RetrievalEngine) relies on.
+        Implementations raise ValueError on non-2-D input and run the
+        whole batch as one device dispatch where the backend allows.
+        """
 
     @abc.abstractmethod
     def exact_query(self, query, k: int = 10):

@@ -72,6 +72,7 @@ class HNSW(VectorIndex):
         assert node == len(self._keys)
         self._keys.append(key)
         self._key2id[key] = node
+        self._bump_epoch()
 
     def bulk_insert(self, keys: Sequence[str], values) -> None:
         values = np.asarray(values, np.float32)
@@ -87,6 +88,7 @@ class HNSW(VectorIndex):
             self._keys = list(keys)
             self._key2id = {k: i for i, k in enumerate(self._keys)}
             self._device_graph = None
+            self._bump_epoch()
             return
         for k, v in zip(keys, values):
             self.insert(k, v)
@@ -106,6 +108,7 @@ class HNSW(VectorIndex):
         self._ensure_tombstones()
         self._deleted[node] = True
         self._deleted_dirty = True
+        self._bump_epoch()
 
     def _ensure_tombstones(self):
         cap = self._builder.vectors.shape[0] if self._builder is not None else 0
@@ -137,16 +140,20 @@ class HNSW(VectorIndex):
         return self._device_graph
 
     # --------------------------------------------------------------- query
-    def query(self, query, k: int = 10, ef: int | None = None):
-        """-> (keys, distances); batched queries return lists of lists."""
-        q = np.asarray(query, np.float32)
-        squeeze = q.ndim == 1
+    def query_batch(self, queries, k: int = 10, ef: int | None = None):
+        """One lock-step device search for the whole [B, D] batch.
+
+        All B queries advance together through ``search_graph`` (DESIGN.md
+        §2); the compiled program is cached per (B, k, ef) shape, which is
+        why the serving layer coalesces into power-of-two B buckets.
+        """
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"query_batch expects [B, D], got {q.shape}")
         ids, dists = jhnsw.search_graph(self._dg(), q, k=k,
                                         ef=ef or self.ef_search)
         ids, dists = np.asarray(ids), np.asarray(dists)
         keys = [[self._keys[i] if i >= 0 else None for i in row] for row in ids]
-        if squeeze:
-            return keys[0], dists[0]
         return keys, dists
 
     def exact_query(self, query, k: int = 10):

@@ -157,6 +157,7 @@ class IVFVectorIndex(VectorIndex):
         self._alive = np.concatenate([self._alive, np.ones(1, bool)])
         self._key2row[key] = row
         self._idx = None
+        self._bump_epoch()
 
     def insert(self, key: str, value: Sequence[float]) -> None:
         v = np.asarray(value, np.float32).reshape(-1)
@@ -186,6 +187,7 @@ class IVFVectorIndex(VectorIndex):
         for j, key in enumerate(keys):
             self._key2row[key] = base + j
         self._idx = None
+        self._bump_epoch()
 
     def update(self, key: str, value: Sequence[float]) -> None:
         if key not in self._key2row:
@@ -196,6 +198,7 @@ class IVFVectorIndex(VectorIndex):
         row = self._key2row.pop(key)
         self._alive[row] = False
         self._idx = None
+        self._bump_epoch()
 
     # --------------------------------------------------------------- query
     def _pack(self) -> IVFIndex:
@@ -228,22 +231,24 @@ class IVFVectorIndex(VectorIndex):
                              lists=jnp.asarray(lists), metric=self.metric)
         return self._idx
 
-    def query(self, query, k: int = 10, nprobe: int | None = None):
+    def query_batch(self, queries, k: int = 10, nprobe: int | None = None,
+                    **kw):
+        """One fixed-shape probed search for the whole [B, D] batch.
+
+        Extra search kwargs from other backends (e.g. hnsw's ``ef``) are
+        accepted and ignored so the serving layer can pass one knob set
+        through any backend."""
         idx = self._pack()
-        q = np.asarray(query, np.float32)
-        squeeze = q.ndim == 1
-        if squeeze:
-            q = q[None]
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"query_batch expects [B, D], got {q.shape}")
         ids, d = search_ivf(idx, q, k=min(k, idx.n),
                             nprobe=nprobe or self.nprobe)
         ids, d = np.asarray(ids), np.asarray(d)
         from repro.core.flat import _pad_results
-        keys, d = _pad_results(
+        return _pad_results(
             [[self._keys[int(self._live_rows[j])] if j >= 0 else None
               for j in row] for row in ids], d, k)
-        if squeeze:
-            return keys[0], d[0]
-        return keys, d
 
     def exact_query(self, query, k: int = 10):
         idx = self._pack()

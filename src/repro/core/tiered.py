@@ -152,6 +152,7 @@ class TieredIndex(VectorIndex):
     def _invalidate(self):
         self._store = None
         self._g = None
+        self._bump_epoch()
 
     def insert(self, key: str, value: Sequence[float]) -> None:
         self.inner.insert(key, value)
@@ -184,25 +185,26 @@ class TieredIndex(VectorIndex):
     def stats(self) -> TierStats:
         return self._tiers()[1].stats
 
-    def query(self, query, k: int = 10, ef: int | None = None):
+    def query_batch(self, queries, k: int = 10, ef: int | None = None):
+        """Batched search through the two-tier store. The host-side beam is
+        the *accounting model* (it counts slow-tier transactions), so the
+        batch runs query-at-a-time — but all B queries share one warmed
+        fast-tier cache, which is exactly the amortisation the model is
+        meant to expose."""
         g, store = self._tiers()
         self.inner._ensure_tombstones()
         deleted = self.inner._deleted
         ef = max(ef or self.ef_search, k)
-        q = np.asarray(query, np.float32)
-        squeeze = q.ndim == 1
-        if squeeze:
-            q = q[None]
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"query_batch expects [B, D], got {q.shape}")
         out_keys, out_d = [], []
         for qv in q:
             ids, dists = _tiered_beam_search(g, deleted, store, qv, k, ef)
             out_keys.append([self.inner._keys[i] if i >= 0 else None
                              for i in ids])
             out_d.append(dists)
-        out_d = np.asarray(out_d, np.float32)
-        if squeeze:
-            return out_keys[0], out_d[0]
-        return out_keys, out_d
+        return out_keys, np.asarray(out_d, np.float32)
 
     def exact_query(self, query, k: int = 10):
         return self.inner.exact_query(query, k)

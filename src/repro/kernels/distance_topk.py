@@ -13,6 +13,25 @@ split-K top-k:
 
 MXU alignment: D and BN should be multiples of 128 for peak; the kernel is
 shape-generic and the wrapper picks aligned tiles when it can.
+
+Shapes / dtypes
+  db   [N, D]  f32 (any float dtype; cast to f32 in-kernel)
+  q    [B, D]  f32
+  ->   dists [B, T*k] f32, ids [B, T*k] i32   (T = N / block_n tiles;
+       per-tile partials — NOT the final top-k, see phase 2 above)
+
+Grid / block layout
+  grid = (B / block_q, N / block_n); block (i, j) loads q tile i and db
+  tile j via BlockSpec (automatic HBM->VMEM pipelining), writes its k
+  partials at output block column j. block_q/block_n are shrunk to the
+  largest divisor of B/N when they don't divide evenly.
+
+Fallback
+  ``interpret=True`` runs the same kernel under the Pallas interpreter
+  (any backend; this is how tests/test_kernels.py runs on CPU).
+  ``ops.flat_topk`` only calls this on TPU (or REPRO_PALLAS=interpret);
+  otherwise it uses the jnp oracle ``ref.distance_topk_ref`` — one
+  [B, N] distance matrix + ``lax.top_k``, numerically identical.
 """
 from __future__ import annotations
 

@@ -5,6 +5,29 @@ materialises the full gathered tensor in HBM. This kernel keeps the bag
 reduction in VMEM: the table stays in HBM (memory_space=ANY), bag member
 rows stream in via double-buffered DMA waves, and each wave accumulates into
 the output tile — HBM traffic is exactly rows-read + bags-written.
+
+Shapes / dtypes
+  table    [R, E]  any float (accumulation in f32)
+  ids      [B, L]  i32 rows into ``table`` (pad a short bag with weight-0
+                   slots — ids must still be in [0, R))
+  weights  [B, L]  f32 or None (None -> all-ones; "mean" divides by the
+                   weight sum per bag, clamped away from 0)
+  ->       bags [B, E] f32; combine in {"sum", "mean"}
+
+Grid / block layout
+  grid = (B / block_b,): one step per bag block. ids/weights tiles
+  [block_b, L] live in VMEM (BlockSpec); the table is never tiled in.
+  scratch [2, wave, E] + 2 DMA semaphores double-buffer the row fetches
+  (block_b*L fetches issued ``wave`` at a time), and acc [block_b, E]
+  holds the running weighted sums; the combine normalisation happens once
+  at the end. ``wave`` is shrunk to divide block_b*L.
+
+Fallback
+  ``interpret=True`` runs the kernel under the Pallas interpreter (CPU
+  kernel tests). ``ops.embedding_bag`` picks Pallas only on TPU (or
+  REPRO_PALLAS=interpret); otherwise the jnp oracle
+  ``ref.embedding_bag_ref`` does the gather-then-reduce in HBM — same
+  numbers, more traffic. The recsys models route through ``ops``.
 """
 from __future__ import annotations
 

@@ -4,6 +4,27 @@ Split-K over the sequence: grid (B, S tiles); running (m, l, acc) scratch
 carries the online softmax across tiles (classic flash decoding). The KV
 tiles stream HBM->VMEM via BlockSpec; per tile the score/PV matmuls run per
 KV head (static loop, G query heads per KV head).
+
+Shapes / dtypes
+  q        [B, H, Dh]       any float (cast to f32 for scores)
+  k, v     [B, S, KVH, Dh]  any float; H = G * KVH (GQA groups)
+  cur_len  scalar i32       live prefix length; positions >= cur_len are
+                            masked (cache slots are capacity-padded)
+  ->       out [B, H, Dh] f32
+
+Grid / block layout
+  grid = (B, S / block_s); program (i, j) loads query row i (VMEM) and KV
+  tile j [1, block_s, KVH, Dh] (BlockSpec-pipelined). cur_len sits in
+  SMEM. Scratch m/l [H, 1] + acc [H, Dh] carry the online softmax across
+  the j axis (sequential grid dim on TPU); tile 0 initialises them, the
+  last tile writes acc / l. block_s is shrunk to divide S.
+
+Fallback
+  ``interpret=True`` runs the kernel under the Pallas interpreter.
+  ``ops.flash_decode`` dispatches to Pallas only on TPU (or
+  REPRO_PALLAS=interpret); elsewhere the jnp oracle
+  ``ref.flash_decode_ref`` computes the same masked softmax-attention in
+  one shot. ``models/transformer.py``'s decode step consumes either.
 """
 from __future__ import annotations
 

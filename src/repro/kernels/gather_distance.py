@@ -7,9 +7,29 @@ async DMA: the database stays in HBM (``memory_space=ANY``), each wave issues
 ``WAVE`` row DMAs into a double-buffered VMEM scratch, and the distance for
 wave ``i`` computes while wave ``i+1`` is in flight.
 
-Grid: one step per query block. Per step:
-  q tile [BQ, D] and ids tile [BQ, K] live in VMEM (BlockSpec),
-  scratch [2, WAVE, D] + 2 DMA semaphores implement the double buffer.
+Shapes / dtypes
+  vectors [N, D]  f32 (stays in HBM — ``memory_space=ANY``; any float
+                  dtype, scratch matches it, distances compute in f32)
+  q       [B, D]  f32
+  ids     [B, K]  i32 row ids into ``vectors`` (callers pre-clip to
+                  [0, N); invalid slots are masked AFTER the kernel)
+  ->      dists [B, K] f32  (cosine/ip: 1 - <q, x>; l2: squared distance)
+
+Grid / block layout
+  grid = (B / block_q,): one step per query block. Per step the q tile
+  [BQ, D] and ids tile [BQ, K] live in VMEM (BlockSpec); the database is
+  never tiled in. scratch [2, WAVE, D] + 2 DMA semaphores implement the
+  double buffer: the BQ*K row fetches are issued WAVE at a time, and wave
+  i's distances compute while wave i+1's DMAs are in flight. ``wave`` is
+  shrunk to divide block_q*K.
+
+Fallback
+  ``interpret=True`` runs this kernel under the Pallas interpreter (any
+  backend; kernel tests on CPU). ``ops.gather_distance`` only selects the
+  Pallas path on TPU (or REPRO_PALLAS=interpret); otherwise it runs the
+  jnp oracle ``ref.gather_distance_ref`` — ``take`` + fused dot, same
+  results. The HNSW search (core/hnsw.py) layers its own -1-padding mask
+  on top either way.
 """
 from __future__ import annotations
 

@@ -21,6 +21,13 @@ from repro.serve.rag import RAGPipeline
 from repro.utils import logger
 
 
+def _power_of_two(v: str) -> int:
+    n = int(v)
+    if n < 1 or n & (n - 1):
+        raise argparse.ArgumentTypeError(f"{v} is not a power of two")
+    return n
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -32,6 +39,10 @@ def main():
     ap.add_argument("--index", default="hnsw",
                     choices=("flat", "ivf", "hnsw", "tiered"),
                     help="VectorIndex backend for the RAG retriever")
+    ap.add_argument("--retrieval-batch", type=_power_of_two, default=128,
+                    help="RetrievalEngine bucket cap (power of two)")
+    ap.add_argument("--retrieval-cache", type=int, default=1024,
+                    help="RetrievalEngine LRU entries (0 disables)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,7 +52,9 @@ def main():
                          dtype=jnp.float32)
 
     if args.rag:
-        rag = RAGPipeline(index_kind=args.index)
+        rag = RAGPipeline(index_kind=args.index,
+                          retrieval_batch=args.retrieval_batch,
+                          retrieval_cache=args.retrieval_cache)
         rag.add_documents(BUILTIN_CORPUS)
         queries = [["how does hnsw search work",
                     "why is on device retrieval private",
@@ -55,6 +68,12 @@ def main():
             logger.info(f"req {i}: retrieved {[d.key for d in out['docs']]}")
         logger.info(f"RAG[{args.index}]: {args.requests} requests in {dt:.1f}s "
                     f"({args.requests / dt:.2f} req/s, continuous batching)")
+        rs = rag.retriever.stats.as_dict()
+        logger.info(
+            f"retrieval: {rs['requests']} requests in {rs['searches']} device "
+            f"dispatches ({rs['searched_queries']} searched + "
+            f"{rs['padded_queries']} bucket pad, "
+            f"cache hit rate {rs['hit_rate']:.2f})")
         return
 
     rng = np.random.default_rng(args.seed)

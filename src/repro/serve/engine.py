@@ -140,13 +140,15 @@ class ServeEngine:
                      max_new_tokens: int = 16) -> list[dict]:
         """Serve RAG requests through the continuous-batching engine.
 
-        ``pipeline`` is a RAGPipeline over any VectorIndex backend: all
-        retrievals run first (on-device ANN), then every augmented prompt
-        is submitted at once so the slot scheduler batches the generation —
-        instead of the one-request-at-a-time ``pipeline.answer`` loop.
+        ``pipeline`` is a RAGPipeline over any VectorIndex backend: every
+        retrieval for the batch runs in ONE RetrievalEngine tick (bucket-
+        coalesced batched ANN + result cache, DESIGN.md §6), then every
+        augmented prompt is submitted at once so the slot scheduler batches
+        the generation — instead of the one-request-at-a-time
+        ``pipeline.answer`` loop.
         """
         from repro.data.corpus import encode_ids
-        retrieved = [pipeline.retrieve(q, k) for q in queries]
+        retrieved = pipeline.retrieve_batch(queries, k)
         prompts = [pipeline.build_prompt(q, docs)
                    for q, docs in zip(queries, retrieved)]
         reqs = []

@@ -9,6 +9,11 @@ is any ``VectorIndex`` backend (flat / ivf / hnsw / tiered; DESIGN.md §1),
 so the pipeline also carries the protocol's CRUD: documents can be added,
 re-embedded (update), and retracted (delete) after indexing — deletion is
 the first-class privacy operation.
+
+Retrieval goes through a ``RetrievalEngine`` (serve/retrieval.py): queries
+are coalesced into power-of-two batch buckets and repeated queries hit an
+LRU cache that every mutation invalidates (DESIGN.md §6), so ``delete``
+stays privacy-safe even with caching in front of the index.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import numpy as np
 
 from repro.core.index import VectorIndex, make_index
 from repro.data.corpus import DocumentStore, HashingEncoder, encode_ids
+from repro.serve.retrieval import RetrievalEngine
 
 DEFAULT_TEMPLATE = (
     "You are a helpful assistant. Use the context to answer.\n"
@@ -42,7 +48,8 @@ class RAGPipeline:
                  store: DocumentStore | None = None,
                  template: str = DEFAULT_TEMPLATE,
                  generate_fn: Callable[[str], str] | None = None,
-                 M: int = 16, ef_construction: int = 100):
+                 M: int = 16, ef_construction: int = 100,
+                 retrieval_batch: int = 128, retrieval_cache: int = 1024):
         self.encoder = encoder or HashingEncoder()
         self.index = index if index is not None else make_index(
             index_kind, metric="cosine", dim=self.encoder.dim, M=M,
@@ -50,6 +57,9 @@ class RAGPipeline:
         self.store = store or DocumentStore()
         self.template = template
         self.generate_fn = generate_fn
+        self.retriever = RetrievalEngine(self.index,
+                                         max_batch=retrieval_batch,
+                                         cache_size=retrieval_cache)
 
     # --------------------------------------------------------------- data
     def add_documents(self, docs: list[tuple[str, str]]):
@@ -78,12 +88,21 @@ class RAGPipeline:
 
     # ------------------------------------------------------------ retrieve
     def retrieve(self, query: str, k: int = 3) -> list[RetrievedDoc]:
+        return self.retrieve_batch([query], k)[0]
+
+    def retrieve_batch(self, queries: list[str], k: int = 3
+                       ) -> list[list[RetrievedDoc]]:
+        """Retrieve for many queries in ONE RetrievalEngine tick: a single
+        encode pass, then one bucket-coalesced device search per (k, ef)
+        group — the serving path ``ServeEngine.generate_rag`` uses for all
+        of its active slots."""
         if self.index.size == 0:           # everything retracted: no context
-            return []
-        qv = self.encoder.encode(query)[0]
-        keys, dists = self.index.query(qv, k=min(k, self.index.size))
-        return [RetrievedDoc(key, self.store.get(key).text, float(d))
-                for key, d in zip(keys, dists) if key is not None]
+            return [[] for _ in queries]
+        qv = self.encoder.encode(list(queries))
+        reqs = self.retriever.retrieve(qv, k=min(k, self.index.size))
+        return [[RetrievedDoc(key, self.store.get(key).text, float(d))
+                 for key, d in zip(r.keys, r.dists) if key is not None]
+                for r in reqs]
 
     # ------------------------------------------------------------- prompt
     def build_prompt(self, query: str, docs: list[RetrievedDoc]) -> str:

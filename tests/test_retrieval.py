@@ -1,0 +1,283 @@
+"""Batched retrieval serving layer (DESIGN.md §6): query_batch protocol
+conformance across all four backends, RetrievalEngine bucket coalescing,
+and the cache-epoch privacy property (a deleted document can never be
+served from cache — and a repeated query never touches the device)."""
+import numpy as np
+import pytest
+
+from repro.core import INDEX_KINDS, make_index
+from repro.data.synthetic import make_corpus
+from repro.serve.retrieval import RetrievalEngine, bucket_size
+
+KINDS = list(INDEX_KINDS)
+
+
+def build(kind, dim=16, n=60, seed=0):
+    data = make_corpus(n, dim, seed=seed)
+    idx = make_index(kind, dim=dim, metric="cosine", M=8,
+                     ef_construction=60, ef_search=48)
+    idx.bulk_insert([f"d{i}" for i in range(n)], data)
+    return idx, data
+
+
+def counting(idx):
+    """Wrap idx.query_batch to count device dispatches."""
+    calls = {"n": 0}
+    orig = idx.query_batch
+
+    def wrapped(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    idx.query_batch = wrapped
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# query_batch protocol conformance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_query_batch_shape_contract(kind):
+    idx, data = build(kind)
+    keys, dists = idx.query_batch(data[:5], k=4)
+    assert len(keys) == 5 and all(len(row) == 4 for row in keys)
+    assert np.asarray(dists).shape == (5, 4)
+    assert keys[2][0] == "d2"
+    # batched even at B=1: no squeeze ambiguity
+    k1, d1 = idx.query_batch(data[:1], k=4)
+    assert len(k1) == 1 and isinstance(k1[0], list)
+    assert np.asarray(d1).shape == (1, 4)
+    # 1-D input is a caller bug
+    with pytest.raises(ValueError, match=r"\[B, D\]"):
+        idx.query_batch(data[0], k=4)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_query_batch_matches_per_query(kind):
+    idx, data = build(kind)
+    rng = np.random.default_rng(3)
+    q = (data[rng.integers(0, 60, 6)]
+         + 0.05 * rng.normal(size=(6, 16)).astype(np.float32))
+    bk, bd = idx.query_batch(q, k=5)
+    bd = np.asarray(bd)
+    for i in range(6):
+        sk, sd = idx.query(q[i], k=5)
+        assert sk == bk[i], (kind, i)
+        np.testing.assert_allclose(np.asarray(sd), bd[i],
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_query_batch_pads_none_for_k_exceeding_live(kind):
+    idx, data = build(kind, n=5)
+    idx.delete("d4")
+    keys, dists = idx.query_batch(data[:2], k=10)
+    assert all(len(row) == 10 for row in keys)
+    assert np.asarray(dists).shape == (2, 10)
+    assert keys[0][0] == "d0" and keys[0][4:] == [None] * 6
+    assert "d4" not in keys[0] and "d4" not in keys[1]
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_mutation_epoch_bumps(kind):
+    idx, data = build(kind)
+    ep = idx.mutation_epoch
+    idx.insert("new", data[0] + 0.01)
+    assert idx.mutation_epoch > ep
+    ep = idx.mutation_epoch
+    idx.update("new", data[1] + 0.01)
+    assert idx.mutation_epoch > ep
+    ep = idx.mutation_epoch
+    idx.delete("new")
+    assert idx.mutation_epoch > ep
+    ep = idx.mutation_epoch
+    idx.query(data[0], k=3)                  # queries do NOT bump
+    assert idx.mutation_epoch == ep
+
+
+# ---------------------------------------------------------------------------
+# RetrievalEngine: coalescing, fan-out, buckets
+# ---------------------------------------------------------------------------
+def test_bucket_ladder():
+    assert [bucket_size(n, 128) for n in (1, 2, 3, 5, 8, 9, 128, 300)] \
+        == [1, 2, 4, 8, 8, 16, 128, 128]
+    with pytest.raises(ValueError, match="power of two"):
+        RetrievalEngine(build("flat")[0], max_batch=12)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_engine_coalesces_one_dispatch(kind):
+    idx, data = build(kind)
+    calls = counting(idx)
+    eng = RetrievalEngine(idx, max_batch=16)
+    reqs = [eng.submit(data[i], k=3) for i in range(5)]
+    assert not any(r.done for r in reqs)             # async: nothing ran yet
+    eng.run_until_drained()
+    assert calls["n"] == 1                           # ONE batched dispatch
+    assert eng.stats.searched_queries == 5
+    assert eng.stats.padded_queries == 3             # padded up to bucket 8
+    for i, r in enumerate(reqs):
+        assert r.done and r.keys[0] == f"d{i}"
+
+
+def test_engine_matches_direct_query_and_chunks_large_batches():
+    idx, data = build("hnsw")
+    eng = RetrievalEngine(idx, max_batch=4, cache_size=0)
+    reqs = eng.retrieve(data[:10], k=3)              # 10 > max_batch: chunks
+    assert eng.stats.searches == 3                   # 4 + 4 + 2->bucket 2
+    for i, r in enumerate(reqs):
+        sk, sd = idx.query(data[i], k=3)
+        assert r.keys == sk
+        np.testing.assert_allclose(r.dists, np.asarray(sd),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_engine_ef_knob_accepted_by_every_backend(kind):
+    """The serving layer passes one knob set through any backend: ef is
+    meaningful for hnsw/tiered and harmlessly ignored by flat/ivf."""
+    idx, data = build(kind)
+    r = RetrievalEngine(idx, max_batch=8).retrieve_one(data[3], k=3, ef=32)
+    assert r.done and r.keys[0] == "d3"
+
+
+def test_engine_groups_by_k_and_ef():
+    idx, data = build("hnsw")
+    calls = counting(idx)
+    eng = RetrievalEngine(idx, max_batch=16)
+    a = eng.submit(data[0], k=3)
+    b = eng.submit(data[1], k=5)                     # different k: own group
+    c = eng.submit(data[2], k=3)
+    eng.run_until_drained()
+    assert calls["n"] == 2                           # one dispatch per group
+    assert len(a.keys) == 3 and len(b.keys) == 5 and len(c.keys) == 3
+
+
+# ---------------------------------------------------------------------------
+# cache: repeats never touch the device; delete invalidates (privacy)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_repeated_query_served_from_cache_without_device_search(kind):
+    idx, data = build(kind)
+    eng = RetrievalEngine(idx, max_batch=8)
+    first = eng.retrieve_one(data[7], k=3)
+    assert not first.from_cache
+    calls = counting(idx)
+    again = eng.retrieve_one(data[7], k=3)
+    assert calls["n"] == 0                    # no device search at all
+    assert again.from_cache and again.done
+    assert again.keys == first.keys
+    np.testing.assert_array_equal(again.dists, first.dists)
+    assert eng.stats.cache_hits == 1
+    # different k is a different cache entry
+    other = eng.retrieve_one(data[7], k=5)
+    assert not other.from_cache
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_delete_invalidates_cache(kind):
+    """The privacy property (DESIGN.md §6): a retracted document must not
+    be served from a cached result, for any backend."""
+    idx, data = build(kind)
+    eng = RetrievalEngine(idx, max_batch=8)
+    first = eng.retrieve_one(data[7], k=3)
+    assert first.keys[0] == "d7"
+    idx.delete("d7")
+    after = eng.retrieve_one(data[7], k=3)
+    assert not after.from_cache               # cache dropped by epoch bump
+    assert "d7" not in after.keys
+    assert eng.stats.invalidations == 1
+
+
+def test_insert_and_update_invalidate_cache_too():
+    idx, data = build("flat")
+    eng = RetrievalEngine(idx, max_batch=8)
+    eng.retrieve_one(data[7], k=3)
+    idx.insert("shadow", data[7])             # co-located: ties with d7
+    r = eng.retrieve_one(data[7], k=3)
+    assert not r.from_cache and "shadow" in r.keys[:2]
+    idx.update("shadow", -data[7])            # pushed far away
+    r2 = eng.retrieve_one(data[7], k=3)
+    assert not r2.from_cache and "shadow" not in r2.keys
+    assert r2.keys[0] == "d7"
+
+
+def test_in_tick_duplicates_share_one_search_row():
+    idx, data = build("hnsw")
+    eng = RetrievalEngine(idx, max_batch=16)
+    reqs = [eng.submit(data[3], k=3) for _ in range(4)]
+    reqs.append(eng.submit(data[4], k=3))
+    eng.run_until_drained()
+    assert eng.stats.searched_queries == 2    # 2 unique rows, 3 dedup
+    assert eng.stats.dedup_hits == 3
+    assert all(r.keys[0] == "d3" for r in reqs[:4])
+    assert reqs[4].keys[0] == "d4"
+
+
+def test_failing_dispatch_resolves_every_pending_request():
+    """A raising backend must not strand async callers: every request of
+    the tick resolves (with ``error`` set), including dedup followers,
+    and the exception still surfaces."""
+    idx, data = build("flat", n=2)
+    idx.delete("d0")
+    idx.delete("d1")                          # empty: query raises
+    eng = RetrievalEngine(idx, max_batch=8)
+    reqs = [eng.submit(data[0], k=1), eng.submit(data[0], k=1),
+            eng.submit(data[1], k=1)]
+    with pytest.raises(ValueError, match="empty"):
+        eng.step()
+    assert all(r.done and r.error is not None for r in reqs)
+    assert not eng.queue                      # nothing silently dropped
+
+
+def test_cached_results_are_isolated_from_caller_mutation():
+    idx, data = build("flat")
+    eng = RetrievalEngine(idx, max_batch=8)
+    first = eng.retrieve_one(data[7], k=3)
+    pristine = list(first.keys)
+    first.keys.reverse()                      # caller abuses its result
+    again = eng.retrieve_one(data[7], k=3)
+    assert again.from_cache and again.keys == pristine
+    again.keys.clear()                        # hits are private copies too
+    assert eng.retrieve_one(data[7], k=3).keys == pristine
+
+
+def test_cache_lru_evicts_and_cache_can_be_disabled():
+    idx, data = build("flat")
+    eng = RetrievalEngine(idx, max_batch=8, cache_size=2)
+    for i in range(3):
+        eng.retrieve_one(data[i], k=3)        # 3 entries into a 2-slot LRU
+    assert eng.stats.evictions == 1
+    assert eng.retrieve_one(data[2], k=3).from_cache      # most recent kept
+    assert not eng.retrieve_one(data[0], k=3).from_cache  # oldest evicted
+    off = RetrievalEngine(idx, max_batch=8, cache_size=0)
+    off.retrieve_one(data[0], k=3)
+    assert not off.retrieve_one(data[0], k=3).from_cache
+
+
+# ---------------------------------------------------------------------------
+# serving integration: RAGPipeline batched path
+# ---------------------------------------------------------------------------
+def test_rag_pipeline_retrieve_batch_single_tick():
+    from repro.data.corpus import BUILTIN_CORPUS
+    from repro.serve.rag import RAGPipeline
+
+    rag = RAGPipeline(index_kind="flat")
+    rag.add_documents(BUILTIN_CORPUS)
+    calls = counting(rag.index)
+    queries = ["how does hnsw search work",
+               "why is on device retrieval private",
+               "how does hnsw search work"]          # repeat dedups in-tick
+    batches = rag.retrieve_batch(queries, k=2)
+    assert calls["n"] == 1                           # one tick, one dispatch
+    assert len(batches) == 3 and all(len(b) == 2 for b in batches)
+    assert [d.key for d in batches[0]] == [d.key for d in batches[2]]
+    # single-query path rides the same engine and now hits the cache
+    docs = rag.retrieve(queries[0], k=2)
+    assert calls["n"] == 1
+    assert [d.key for d in docs] == [d.key for d in batches[0]]
+    # retraction still wins over the cache end-to-end
+    top = batches[0][0].key
+    rag.delete_document(top)
+    docs2 = rag.retrieve(queries[0], k=2)
+    assert all(d.key != top for d in docs2)
