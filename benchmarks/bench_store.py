@@ -1,0 +1,115 @@
+"""Durable store benchmarks (DESIGN.md §7): what does persistence cost,
+and what does warm restore buy?
+
+The paper's §5 headline is that building 1M x 384-d HNSW in the browser
+takes ~94 minutes — which is exactly why MeMemo persists the index in
+IndexedDB instead of rebuilding per session. Rows here quantify our
+analog:
+
+  * ``store_snapshot_*``   — chunked snapshot write throughput (MB/s);
+  * ``store_restore_*``    — warm restore (snapshot + attach, NO graph
+                             rebuild) vs ``store_cold_build_*``, the
+                             re-embed-and-rebuild path restore replaces —
+                             the speedup is the reason the store exists;
+  * ``store_wal_append_*`` — per-mutation WAL overhead on the insert path
+                             (logged vs unlogged insert);
+  * ``store_wal_replay_*`` — crash-recovery replay rate (ops/s through
+                             the ``_*_impl`` layer);
+  * ``store_compact_*``    — secure-delete compaction (page rewrite +
+                             WAL truncation) after deleting 10% of rows.
+
+Smoke mode (REPRO_BENCH_SMOKE=1) shrinks everything to a seconds-scale
+canary: it catches a broken save/restore path, not perf regressions.
+"""
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _dir_bytes(root: str) -> int:
+    total = 0
+    for dp, _, fns in os.walk(root):
+        for fn in fns:
+            total += os.path.getsize(os.path.join(dp, fn))
+    return total
+
+
+def run(rows: list):
+    from repro.core import make_index
+    from repro.store import IndexStore
+
+    n, dim = (2_000, 32) if SMOKE else (20_000, 64)
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n, dim)).astype(np.float32)
+    keys = [f"d{i}" for i in range(n)]
+
+    root = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        # ---------------- cold build: the path warm restore replaces ----
+        t0 = time.perf_counter()
+        idx = make_index("hnsw", metric="cosine", M=8, ef_construction=40,
+                         use_bulk_build=True,
+                         store=IndexStore(os.path.join(root, "hnsw")))
+        idx.bulk_insert(keys, data)
+        idx.query(data[0], k=1)               # force device residency
+        t_cold = time.perf_counter() - t0
+        rows.append((f"store_cold_build_n{n}", t_cold * 1e6,
+                     f"ms_per_vec={t_cold / n * 1e3:.3f}"))
+
+        # ---------------- snapshot write --------------------------------
+        store = idx._store
+        t0 = time.perf_counter()
+        store.snapshot(idx)
+        t_snap = time.perf_counter() - t0
+        nbytes = _dir_bytes(os.path.join(root, "hnsw"))
+        rows.append((f"store_snapshot_n{n}", t_snap * 1e6,
+                     f"mb={nbytes / 1e6:.1f} "
+                     f"mb_per_s={nbytes / 1e6 / max(t_snap, 1e-9):.0f}"))
+
+        # ---------------- warm restore vs cold rebuild ------------------
+        t0 = time.perf_counter()
+        r = IndexStore(os.path.join(root, "hnsw")).load_index()
+        r.query(data[0], k=1)                 # include the device upload
+        t_restore = time.perf_counter() - t0
+        rows.append((f"store_restore_n{n}", t_restore * 1e6,
+                     f"speedup_vs_cold={t_cold / max(t_restore, 1e-9):.1f}x"))
+
+        # ---------------- WAL append overhead (flat: cheapest impl) -----
+        m = 200 if SMOKE else 1_000
+        extra = rng.normal(size=(m, dim)).astype(np.float32)
+        plain = make_index("flat", dim=dim, metric="cosine")
+        t0 = time.perf_counter()
+        for j in range(m):
+            plain.insert(f"p{j}", extra[j])
+        t_plain = time.perf_counter() - t0
+        logged = make_index("flat", dim=dim, metric="cosine",
+                            store=IndexStore(os.path.join(root, "flat")))
+        t0 = time.perf_counter()
+        for j in range(m):
+            logged.insert(f"p{j}", extra[j])
+        t_logged = time.perf_counter() - t0
+        rows.append((f"store_wal_append_m{m}", t_logged / m * 1e6,
+                     f"overhead={(t_logged - t_plain) / m * 1e6:.1f}us_per_op"))
+
+        # ---------------- WAL replay rate -------------------------------
+        t0 = time.perf_counter()
+        IndexStore(os.path.join(root, "flat")).load_index()
+        t_replay = time.perf_counter() - t0
+        rows.append((f"store_wal_replay_m{m}", t_replay / m * 1e6,
+                     f"ops_per_s={m / max(t_replay, 1e-9):.0f}"))
+
+        # ---------------- secure-delete compaction ----------------------
+        for j in range(0, m, 10):             # tombstone 10% of the rows
+            logged.delete(f"p{j}")
+        t0 = time.perf_counter()
+        logged._store.compact(logged)
+        t_compact = time.perf_counter() - t0
+        rows.append((f"store_compact_m{m}", t_compact * 1e6,
+                     f"deleted={m // 10} live={logged.size}"))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

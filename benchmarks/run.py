@@ -16,7 +16,7 @@ import os
 import sys
 import time
 
-SUITES = ["build", "query", "tiered", "rag", "serve", "roofline"]
+SUITES = ["build", "query", "tiered", "rag", "serve", "store", "roofline"]
 
 
 def main() -> None:
@@ -53,6 +53,9 @@ def main() -> None:
               file=sys.stderr)
 
     if args.json:
+        out_dir = os.path.dirname(args.json)
+        if out_dir:                      # CI writes to bench-results/…
+            os.makedirs(out_dir, exist_ok=True)
         payload = {
             "schema_version": 1,
             "smoke": bool(args.smoke),

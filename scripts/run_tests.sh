@@ -1,15 +1,22 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the one command CI and contributors run.
 #   scripts/run_tests.sh [extra pytest args]
-#   scripts/run_tests.sh --smoke   # tiny bench_query/bench_serve canary:
-#                                  # catches perf-path breakage (shape
-#                                  # regressions, lost batching, cache
-#                                  # misses) without a full benchmark run
+#   scripts/run_tests.sh --smoke   # tiny bench_query/bench_serve/bench_store
+#                                  # canary: catches perf-path breakage
+#                                  # (shape regressions, lost batching,
+#                                  # broken save/restore) without a full
+#                                  # benchmark run
+#
+# --smoke always writes its machine-readable rows to a STABLE path
+# ($SMOKE_JSON, default bench-results/BENCH_smoke.json) so CI can upload
+# it as a workflow artifact and the perf trajectory accumulates per-PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--smoke" ]]; then
   shift
+  out="${SMOKE_JSON:-bench-results/BENCH_smoke.json}"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    exec python -m benchmarks.run --only query,serve --smoke "$@"
+    exec python -m benchmarks.run --only query,serve,store --smoke \
+      --json "$out" "$@"
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -14,9 +14,6 @@ Two layers here:
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +71,8 @@ class FlatVectorIndex(VectorIndex):
     ``exact_query`` coincide. Mutations mark the device array stale; the
     next query compacts live rows host-side and re-uploads once."""
 
+    kind = "flat"
+
     def __init__(self, *, metric: str = "cosine", dim: int | None = None):
         if metric not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown metric {metric!r}")
@@ -87,7 +86,7 @@ class FlatVectorIndex(VectorIndex):
         self._live_rows: np.ndarray | None = None
 
     # ------------------------------------------------------------ mutation
-    def insert(self, key: str, value: Sequence[float]) -> None:
+    def _insert_impl(self, key: str, value: np.ndarray) -> None:
         v = np.asarray(value, np.float32).reshape(-1)
         if self.dim is None:
             self.dim = v.shape[0]
@@ -102,10 +101,7 @@ class FlatVectorIndex(VectorIndex):
         self._flat = None
         self._bump_epoch()
 
-    def bulk_insert(self, keys: Sequence[str], values) -> None:
-        values = np.asarray(values, np.float32)
-        if len(keys) != len(values):
-            raise ValueError("keys/values length mismatch")
+    def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
         for key in keys:
             if key in self._key2row:
                 self._alive[self._key2row[key]] = False
@@ -121,15 +117,25 @@ class FlatVectorIndex(VectorIndex):
         self._flat = None
         self._bump_epoch()
 
-    def update(self, key: str, value: Sequence[float]) -> None:
-        if key not in self._key2row:
-            raise KeyError(key)
-        self.insert(key, value)
+    def _update_impl(self, key: str, value: np.ndarray) -> None:
+        self._insert_impl(key, value)
 
-    def delete(self, key: str) -> None:
-        row = self._key2row.pop(key)               # KeyError if absent
+    def _delete_impl(self, key: str) -> None:
+        row = self._key2row.pop(key)
         self._alive[row] = False
         self._flat = None
+        self._bump_epoch()
+
+    def _compact_impl(self) -> None:
+        """Physically drop tombstoned rows (DESIGN.md §7): live rows are
+        re-packed contiguously and dead vectors cease to exist host-side."""
+        live = np.flatnonzero(self._alive)
+        self._vecs = np.ascontiguousarray(self._vecs[live])
+        self._keys = [self._keys[i] for i in live]
+        self._alive = np.ones(live.size, bool)
+        self._key2row = {k: i for i, k in enumerate(self._keys)}
+        self._flat = None
+        self._live_rows = None
         self._bump_epoch()
 
     # --------------------------------------------------------------- query
@@ -158,31 +164,35 @@ class FlatVectorIndex(VectorIndex):
         return self.query(query, k)        # flat IS the brute-force oracle
 
     # --------------------------------------------------------- persistence
-    def export(self, path: str) -> None:
-        if not self._keys:
-            raise ValueError("index is empty")
-        meta = {"metric": self.metric, "dim": self.dim, "keys": self._keys}
-        tmp = path + ".tmp.npz"
-        np.savez_compressed(tmp[:-4], vectors=self._vecs, alive=self._alive,
-                            meta=np.frombuffer(json.dumps(meta).encode(),
-                                               dtype=np.uint8))
-        os.replace(tmp, path)
+    def config_dict(self) -> dict:
+        return {"metric": self.metric, "dim": self.dim}
 
-    @classmethod
-    def load(cls, path: str) -> "FlatVectorIndex":
-        z = np.load(path, allow_pickle=False)
-        meta = json.loads(bytes(z["meta"]).decode())
-        idx = cls(metric=meta["metric"], dim=meta["dim"])
-        idx._vecs = np.asarray(z["vectors"], np.float32)
-        idx._alive = np.asarray(z["alive"], bool)
-        idx._keys = list(meta["keys"])
-        idx._key2row = {k: i for i, k in enumerate(idx._keys)
-                        if idx._alive[i]}
-        return idx
+    def state_dict(self) -> tuple[dict, dict]:
+        arrays = {"vectors": self._vecs, "alive": self._alive}
+        meta = {"keys": list(self._keys), "epoch": self._epoch}
+        return arrays, meta
+
+    def restore_state(self, arrays: dict, meta: dict) -> None:
+        self._vecs = np.asarray(arrays["vectors"], np.float32)
+        self._alive = np.asarray(arrays["alive"], bool)
+        if self._vecs.shape[1]:
+            self.dim = int(self._vecs.shape[1])
+        self._keys = list(meta["keys"])
+        self._key2row = {k: i for i, k in enumerate(self._keys)
+                         if self._alive[i]}
+        self._epoch = int(meta["epoch"])
+        self._flat = None
+        self._live_rows = None
+
+    def _row_count(self) -> int:
+        return len(self._keys)
 
     @property
     def size(self) -> int:
         return len(self._key2row)
+
+    def _contains(self, key: str) -> bool:
+        return key in self._key2row
 
     def keys(self) -> list[str]:
         return [k for i, k in enumerate(self._keys) if self._alive[i]]

@@ -14,14 +14,15 @@ implements the same keyed CRUD + query contract:
     keys, dists = idx.query(q, k=10)    # ANN search
     keys, dists = idx.query_batch(Q, k) # batched ANN: [B,D] -> lists of lists
     keys, dists = idx.exact_query(q, k) # brute-force oracle, same live set
-    idx.export(path); Idx.load(path)    # tombstones + keys round-trip
+    idx.export(path); Idx.load(path)    # one-file persistence (state_dict)
     idx.mutation_epoch                  # bumped by every mutation (caching)
 
 Design notes (DESIGN.md §1):
   * keys are caller-owned strings; inserting an existing key is an update;
   * ``delete`` is a soft delete everywhere — backends keep fixed device
     shapes and exclude tombstoned rows from results (HNSW keeps them
-    traversable, hnswlib-style; see DESIGN.md §3);
+    traversable, hnswlib-style; see DESIGN.md §3); ``compact()`` is the
+    physical complement: it drops tombstoned rows for real (DESIGN.md §7);
   * ``size`` counts live (non-deleted) keys;
   * ``query``/``exact_query`` return ``(keys, dists)``; batched queries
     return lists of lists. Missing slots (k > live) come back as ``None``;
@@ -32,20 +33,35 @@ Design notes (DESIGN.md §1):
   * every mutation bumps ``mutation_epoch``. The epoch is what lets a
     result cache (serve/retrieval.py) guarantee a retracted document is
     never served from a stale entry — the privacy property (DESIGN.md §6).
+
+Persistence (DESIGN.md §7): the public mutators here are TEMPLATE
+methods — they validate, write-ahead-log to an attached ``IndexStore``
+(repro.store), then call the backend's ``_*_impl``. Backends therefore
+implement ``_insert_impl``/``_update_impl``/``_delete_impl``/
+``_bulk_insert_impl`` plus a uniform serialization triple
+(``config_dict``/``state_dict``/``restore_state``) that snapshots, WAL
+replay, and the one-file ``export``/``load`` are all built on.
 """
 from __future__ import annotations
 
 import abc
+import json
+import os
 from typing import Sequence
 
 import numpy as np
+
+_STATE_FORMAT_VERSION = 1
+_ARR_PREFIX = "arr_"
 
 
 class VectorIndex(abc.ABC):
     """Keyed, mutable ANN index. All four backends implement this."""
 
+    kind: str                  # factory name: "flat" | "ivf" | "hnsw" | ...
     metric: str
-    _epoch: int = 0        # mutation counter; instance attr on first bump
+    _epoch: int = 0            # mutation counter; instance attr on first bump
+    _store = None              # IndexStore when attached (repro.store)
 
     # -------------------------------------------------------------- epoch
     @property
@@ -55,32 +71,106 @@ class VectorIndex(abc.ABC):
         Consumers that cache query results key their validity on this
         value: any mutation — in particular ``delete``, the privacy
         operation — invalidates everything cached under the old epoch.
+        The epoch is persisted by snapshots and WAL records, so a
+        warm-restored index resumes at the exact epoch the live one died
+        at (DESIGN.md §7) and epoch-keyed invariants survive restarts.
         """
         return self._epoch
 
     def _bump_epoch(self) -> None:
         self._epoch = self._epoch + 1
 
+    # --------------------------------------------------- store integration
+    def _log_mutation(self, op: str, meta: dict,
+                      arrays: dict | None = None) -> None:
+        """Append one WAL record BEFORE the mutation touches index state.
+        No-op when no store is attached. The record carries the epoch
+        *before* the op, which is how replay skips records a snapshot
+        already covers (repro.store.store). An op that raises AFTER its
+        record landed is replayed the same way: the deterministic impl
+        raises identically, replay skips the record, and the epoch chain
+        of the following records confirms nothing was applied."""
+        if self._store is not None:
+            self._store.wal_append(op, epoch=self._epoch, meta=meta,
+                                   arrays=arrays)
+
+    def _notify_store(self) -> None:
+        """After a mutation applied: drive the store's snapshot_every
+        policy."""
+        if self._store is not None:
+            self._store.notify_mutation(self)
+
+    def _apply_derived(self, op: str, meta: dict, arrays: dict) -> None:
+        """Replay hook for ``derived.*`` WAL records — derived state a
+        backend trains outside the mutation path but that queries depend
+        on (IVF centroids). Backends with such state override this."""
+        raise ValueError(f"{type(self).__name__} cannot replay {op!r}")
+
     # ------------------------------------------------------------ mutation
-    @abc.abstractmethod
+    # Public mutators are final template methods: validate -> WAL ->
+    # _*_impl -> notify. Backends implement the _*_impl layer and MUST NOT
+    # log or notify there (replay re-enters through the impls).
     def insert(self, key: str, value: Sequence[float]) -> None:
         """Upsert one (key, vector) pair."""
+        v = np.asarray(value, np.float32)
+        self._log_mutation("insert", {"key": key}, {"vec": v})
+        self._insert_impl(key, v)
+        self._notify_store()
 
     def bulk_insert(self, keys: Sequence[str], values) -> None:
-        """Batched upsert; backends override when they have a faster path."""
+        """Batched upsert (paper C3) — ONE WAL record for the whole batch."""
         values = np.asarray(values, np.float32)
         if len(keys) != len(values):
             raise ValueError("keys/values length mismatch")
-        for k, v in zip(keys, values):
-            self.insert(k, v)
+        keys = list(keys)
+        self._log_mutation("bulk_insert", {"keys": keys}, {"vec": values})
+        self._bulk_insert_impl(keys, values)
+        self._notify_store()
 
-    @abc.abstractmethod
     def update(self, key: str, value: Sequence[float]) -> None:
         """Replace the vector of an existing key. KeyError if absent."""
+        if not self._contains(key):
+            raise KeyError(key)
+        v = np.asarray(value, np.float32)
+        self._log_mutation("update", {"key": key}, {"vec": v})
+        self._update_impl(key, v)
+        self._notify_store()
 
-    @abc.abstractmethod
     def delete(self, key: str) -> None:
         """Soft-delete a key: never returned again. KeyError if absent."""
+        if not self._contains(key):
+            raise KeyError(key)
+        self._log_mutation("delete", {"key": key})
+        self._delete_impl(key)
+        self._notify_store()
+
+    @abc.abstractmethod
+    def _insert_impl(self, key: str, value: np.ndarray) -> None: ...
+
+    def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
+        for k, v in zip(keys, values):
+            self._insert_impl(k, v)
+
+    @abc.abstractmethod
+    def _update_impl(self, key: str, value: np.ndarray) -> None: ...
+
+    @abc.abstractmethod
+    def _delete_impl(self, key: str) -> None: ...
+
+    def compact(self) -> None:
+        """Physically drop tombstoned rows and bump the epoch (so
+        epoch-keyed caches invalidate). Compaction is NOT WAL-logged —
+        on a store-attached index the store immediately publishes a
+        fresh snapshot of the compacted state, truncates the WAL, and
+        purges old snapshots (the secure-delete contract, DESIGN.md §7).
+        That hook also keeps restore sound: without it the epoch bumps
+        would leave a gap the WAL cannot replay across."""
+        self._compact_impl()
+        if self._store is not None:
+            self._store.on_compact(self)
+
+    @abc.abstractmethod
+    def _compact_impl(self) -> None: ...
 
     # --------------------------------------------------------------- query
     def query(self, query, k: int = 10, **kw):
@@ -109,14 +199,54 @@ class VectorIndex(abc.ABC):
         """Brute-force top-k over the same live vectors -> (keys, dists)."""
 
     # --------------------------------------------------------- persistence
+    # All persistence — one-file export/load here, chunked snapshots and
+    # WAL replay in repro.store — is built on one uniform serialization
+    # triple every backend implements (DESIGN.md §7):
+    #   config_dict()   -> kwargs that recreate an EMPTY index via
+    #                      make_index(self.kind, **cfg)
+    #   state_dict()    -> (arrays, meta): full mutation-determined host
+    #                      state — vectors, tombstones, graph tables,
+    #                      keys, epoch, RNG state (HNSW)
+    #   restore_state() -> inverse of state_dict on a fresh instance
     @abc.abstractmethod
+    def config_dict(self) -> dict: ...
+
+    @abc.abstractmethod
+    def state_dict(self) -> tuple[dict, dict]: ...
+
+    @abc.abstractmethod
+    def restore_state(self, arrays: dict, meta: dict) -> None: ...
+
+    @abc.abstractmethod
+    def _row_count(self) -> int:
+        """Total rows ever inserted, INCLUDING tombstoned ones."""
+
     def export(self, path: str) -> None:
-        """Write the index (vectors, keys, tombstones) to ``path``."""
+        """Write the whole index to one npz (vectors, keys, tombstones,
+        epoch — everything ``state_dict`` captures), atomically."""
+        if self._row_count() == 0:
+            raise ValueError("index is empty")
+        arrays, meta = self.state_dict()
+        head = {"format_version": _STATE_FORMAT_VERSION, "kind": self.kind,
+                "config": self.config_dict(), "meta": meta}
+        tmp = path + ".tmp.npz"
+        with open(tmp, "wb") as f:        # file handle: no .npz suffixing
+            np.savez(f, __head__=np.frombuffer(json.dumps(head).encode(),
+                                               dtype=np.uint8),
+                     **{_ARR_PREFIX + k: v for k, v in arrays.items()})
+        os.replace(tmp, path)
 
     @classmethod
-    @abc.abstractmethod
     def load(cls, path: str) -> "VectorIndex":
-        """Inverse of :meth:`export`."""
+        """Inverse of :meth:`export`. Returns an instance of the kind the
+        file records (== ``cls`` when called on the concrete backend)."""
+        with np.load(path, allow_pickle=False) as z:
+            head = json.loads(bytes(z["__head__"]).decode())
+            arrays = {k[len(_ARR_PREFIX):]: z[k] for k in z.files
+                      if k.startswith(_ARR_PREFIX)}
+        idx = make_index(head["kind"], **head["config"])
+        idx.restore_state(arrays, head["meta"])
+        return idx
 
     # ----------------------------------------------------------- introspect
     @property
@@ -127,8 +257,12 @@ class VectorIndex(abc.ABC):
     def __len__(self) -> int:
         return self.size
 
+    @abc.abstractmethod
+    def _contains(self, key: str) -> bool:
+        """O(1) live-key membership (validation on the mutation path)."""
+
     def __contains__(self, key: str) -> bool:
-        return key in self.keys()
+        return self._contains(key)
 
     @abc.abstractmethod
     def keys(self) -> list[str]:
@@ -141,14 +275,7 @@ class VectorIndex(abc.ABC):
 INDEX_KINDS = ("flat", "ivf", "hnsw", "tiered")
 
 
-def make_index(kind: str, **cfg) -> VectorIndex:
-    """Create a VectorIndex backend by name.
-
-    kind: "flat" | "ivf" | "hnsw" | "tiered". ``cfg`` passes through to the
-    backend constructor (common: metric, dim; hnsw/tiered: M,
-    ef_construction, ef_search; ivf: nlist, nprobe).
-    """
-    kind = kind.lower()
+def _construct(kind: str, cfg: dict) -> VectorIndex:
     if kind == "flat":
         from repro.core.flat import FlatVectorIndex
         cfg.pop("M", None); cfg.pop("ef_construction", None)
@@ -172,8 +299,38 @@ def make_index(kind: str, **cfg) -> VectorIndex:
                      f"{INDEX_KINDS}")
 
 
-def make_index_from_config(cfg, kind: str | None = None, **overrides
-                           ) -> VectorIndex:
+def make_index(kind: str, store=None, **cfg) -> VectorIndex:
+    """Create a VectorIndex backend by name.
+
+    kind: "flat" | "ivf" | "hnsw" | "tiered". ``cfg`` passes through to the
+    backend constructor (common: metric, dim; hnsw/tiered: M,
+    ef_construction, ef_search; ivf: nlist, nprobe).
+
+    store: optional durability home — an ``IndexStore`` or a directory
+    path (DESIGN.md §7). If the store already holds an index, it is
+    warm-restored (snapshot + WAL replay; ``cfg`` is ignored in favor of
+    the stored construction params, and a ``kind`` mismatch raises).
+    Otherwise a fresh index is created and attached, so every mutation
+    from here on is write-ahead logged.
+    """
+    kind = kind.lower()
+    if kind not in INDEX_KINDS:
+        raise ValueError(f"unknown index kind {kind!r}; expected one of "
+                         f"{INDEX_KINDS}")
+    if store is not None:
+        from repro.store import IndexStore
+        if not isinstance(store, IndexStore):
+            store = IndexStore(str(store))
+        if store.has_state():
+            return store.load_index(expect_kind=kind)
+        idx = _construct(kind, cfg)
+        store.attach(idx)
+        return idx
+    return _construct(kind, cfg)
+
+
+def make_index_from_config(cfg, kind: str | None = None, store=None,
+                           **overrides) -> VectorIndex:
     """Build an index from a ``RetrievalConfig`` (configs/mememo.py)."""
     kind = kind or getattr(cfg, "index_kind", "hnsw")
     params = dict(dim=cfg.dim, metric=cfg.metric, M=cfg.M,
@@ -184,4 +341,4 @@ def make_index_from_config(cfg, kind: str | None = None, **overrides
                       nlist=getattr(cfg, "nlist", 64),
                       nprobe=getattr(cfg, "nprobe", 8))
     params.update(overrides)
-    return make_index(kind, **params)
+    return make_index(kind, store=store, **params)

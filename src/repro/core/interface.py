@@ -25,10 +25,6 @@ instead of re-converting the whole graph (DESIGN.md §3).
 """
 from __future__ import annotations
 
-import json
-import os
-from typing import Sequence
-
 import numpy as np
 
 from repro.core import hnsw as jhnsw
@@ -38,6 +34,8 @@ from repro.core.index import VectorIndex
 
 
 class HNSW(VectorIndex):
+    kind = "hnsw"
+
     def __init__(self, distance_function: str = "cosine", *, M: int = 16,
                  ef_construction: int = 200, ef_search: int = 64,
                  seed: int = 0, use_bulk_build: bool = False):
@@ -59,10 +57,10 @@ class HNSW(VectorIndex):
         self._deleted_dirty = False
 
     # ------------------------------------------------------------ mutation
-    def insert(self, key: str, value: Sequence[float]) -> None:
+    def _insert_impl(self, key: str, value: np.ndarray) -> None:
         """Upsert one (key, vector); existing keys are updated in place."""
         if key in self._key2id:
-            self.delete(key)
+            self._delete_impl(key)
         v = np.asarray(value, np.float32)
         if self._builder is None:
             self._builder = build.SequentialBuilder(
@@ -74,9 +72,7 @@ class HNSW(VectorIndex):
         self._key2id[key] = node
         self._bump_epoch()
 
-    def bulk_insert(self, keys: Sequence[str], values) -> None:
-        values = np.asarray(values, np.float32)
-        assert len(keys) == len(values), "keys/values length mismatch"
+    def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
         if self.use_bulk_build and self._builder is None:
             g = build.bulk_build(
                 values, M=self.M, ef_construction=self.ef_construction,
@@ -91,17 +87,15 @@ class HNSW(VectorIndex):
             self._bump_epoch()
             return
         for k, v in zip(keys, values):
-            self.insert(k, v)
+            self._insert_impl(k, v)
 
-    bulkInsert = bulk_insert   # TS-parity alias
+    bulkInsert = VectorIndex.bulk_insert   # TS-parity alias
 
-    def update(self, key: str, value: Sequence[float]) -> None:
+    def _update_impl(self, key: str, value: np.ndarray) -> None:
         """Replace the vector of an existing key (delete + reinsert)."""
-        if key not in self._key2id:
-            raise KeyError(key)
-        self.insert(key, value)
+        self._insert_impl(key, value)
 
-    def delete(self, key: str) -> None:
+    def _delete_impl(self, key: str) -> None:
         """Soft-delete: tombstone the row; it stays traversable but is
         never returned from query/exact_query again."""
         node = self._key2id.pop(key)               # KeyError if absent
@@ -109,6 +103,31 @@ class HNSW(VectorIndex):
         self._deleted[node] = True
         self._deleted_dirty = True
         self._bump_epoch()
+
+    def _compact_impl(self) -> None:
+        """Physically drop tombstoned rows (DESIGN.md §7): rebuild the
+        graph from scratch over live vectors only. Deleted rows stop
+        existing host-side — this is the expensive half of secure delete
+        (tombstoning stays the cheap everyday path); the store layer
+        rewrites the on-disk pages afterwards."""
+        if self._builder is None:
+            self._bump_epoch()
+            return
+        self._ensure_tombstones()
+        n = self._builder.n
+        live = np.flatnonzero(~self._deleted[:n])
+        vecs = self._builder.vectors[live].copy()
+        keys = [self._keys[i] for i in live]
+        self._builder = None                       # fresh graph + fresh RNG
+        self._keys = []
+        self._key2id = {}
+        self._deleted = np.zeros(0, bool)
+        self._device_graph = None
+        self._deleted_dirty = False
+        for k, v in zip(keys, vecs):
+            self._insert_impl(k, v)                # bumps epoch per insert
+        if not keys:
+            self._bump_epoch()
 
     def _ensure_tombstones(self):
         cap = self._builder.vectors.shape[0] if self._builder is not None else 0
@@ -182,57 +201,91 @@ class HNSW(VectorIndex):
     def size(self) -> int:
         return len(self._key2id)
 
+    def _contains(self, key: str) -> bool:
+        return key in self._key2id
+
+    def _row_count(self) -> int:
+        return self._builder.n if self._builder is not None else 0
+
     def keys(self) -> list[str]:
         n = self._builder.n if self._builder is not None else 0
         self._ensure_tombstones()
         return [self._keys[i] for i in range(n) if not self._deleted[i]]
 
     # ------------------------------------------------------- persistence
-    def export(self, path: str) -> None:
+    def config_dict(self) -> dict:
+        return {"metric": self.metric, "M": self.M,
+                "ef_construction": self.ef_construction,
+                "ef_search": self.ef_search, "seed": self.seed,
+                "use_bulk_build": self.use_bulk_build}
+
+    def state_dict(self) -> tuple[dict, dict]:
+        """Full mutation-determined host state, CAPACITY-padded: the
+        builder's fixed-shape arrays go to disk as-is, so restore adopts
+        them directly and the first query does one plain device upload —
+        no graph rebuild (the expensive path the paper measures at 94 min
+        for 1M rows). The builder RNG state rides along so WAL replay of
+        later inserts draws the exact same levels (DESIGN.md §7).
+
+        An index with no builder (nothing ever inserted, or compacted
+        down to zero live rows) serializes as the empty state — a store
+        must still be able to snapshot it: compacting away the LAST
+        document is precisely the secure-delete case."""
         if self._builder is None:
-            raise ValueError("index is empty")
-        g = self._builder.graph()
+            arrays = {"vectors": np.zeros((0, 0), np.float32),
+                      "levels": np.zeros(0, np.int32),
+                      "neighbors0": np.zeros((0, 2 * self.M), np.int32),
+                      "upper": np.zeros((0, 0, self.M), np.int32),
+                      "deleted": np.zeros(0, bool)}
+            meta = {"keys": [], "epoch": self._epoch, "n": 0, "entry": -1,
+                    "max_level": -1, "max_level_cap": 12, "rng_state": None}
+            return arrays, meta
+        b = self._builder
         self._ensure_tombstones()
-        meta = {
-            "metric": self.metric, "M": self.M,
-            "ef_construction": self.ef_construction,
-            "ef_search": self.ef_search,
-            "entry": int(g.entry), "max_level": int(g.max_level),
-            "n": int(g.n), "keys": self._keys[: g.n],
-        }
-        tmp = path + ".tmp.npz"          # atomic: write sidecar, then rename
-        np.savez_compressed(tmp[:-4],    # np.savez appends the .npz itself
-                            vectors=g.vectors, neighbors0=g.neighbors0,
-                            upper=g.upper, levels=g.levels,
-                            deleted=self._deleted[: g.n],
-                            meta=np.frombuffer(
-                                json.dumps(meta).encode(), dtype=np.uint8))
-        os.replace(tmp, path)
+        arrays = {"vectors": b.vectors, "levels": b.levels,
+                  "neighbors0": b.neighbors0, "upper": b.upper,
+                  "deleted": self._deleted}
+        meta = {"keys": list(self._keys), "epoch": self._epoch,
+                "n": int(b.n), "entry": int(b.entry),
+                "max_level": int(b.max_level),
+                "max_level_cap": int(b.max_level_cap),
+                "rng_state": b.rng.bit_generator.state}
+        return arrays, meta
 
-    export_index = export
-    exportIndex = export
+    def restore_state(self, arrays: dict, meta: dict) -> None:
+        if meta["n"] == 0:                # empty state: no builder yet
+            self._builder = None
+            self._keys = []
+            self._key2id = {}
+            self._deleted = np.zeros(0, bool)
+            self._epoch = int(meta["epoch"])
+            self._device_graph = None
+            self._deleted_dirty = False
+            return
+        vectors = np.asarray(arrays["vectors"], np.float32)
+        b = build.SequentialBuilder(
+            vectors.shape[1], M=self.M,
+            ef_construction=self.ef_construction, metric=self.metric,
+            capacity=vectors.shape[0], max_level_cap=meta["max_level_cap"],
+            seed=self.seed)
+        b.vectors = vectors
+        b.levels = np.asarray(arrays["levels"], np.int32)
+        b.neighbors0 = np.asarray(arrays["neighbors0"], np.int32)
+        b.upper = np.asarray(arrays["upper"], np.int32)
+        b.n = int(meta["n"])
+        b.entry = int(meta["entry"])
+        b.max_level = int(meta["max_level"])
+        b.rng.bit_generator.state = meta["rng_state"]
+        self._builder = b
+        self._keys = list(meta["keys"])
+        self._deleted = np.asarray(arrays["deleted"], bool).copy()
+        self._key2id = {k: i for i, k in enumerate(self._keys)
+                        if not self._deleted[i]}
+        self._epoch = int(meta["epoch"])
+        self._device_graph = None
+        self._deleted_dirty = False
 
-    @classmethod
-    def load(cls, path: str) -> "HNSW":
-        z = np.load(path, allow_pickle=False)
-        meta = json.loads(bytes(z["meta"]).decode())
-        idx = cls(distance_function=meta["metric"], M=meta["M"],
-                  ef_construction=meta["ef_construction"],
-                  ef_search=meta["ef_search"])
-        g = build.HNSWGraph(
-            vectors=z["vectors"], neighbors0=z["neighbors0"],
-            upper=z["upper"], levels=z["levels"], entry=meta["entry"],
-            max_level=meta["max_level"], metric=meta["metric"], n=meta["n"])
-        idx._builder = build.SequentialBuilder.from_graph(
-            g, ef_construction=meta["ef_construction"])
-        idx._keys = list(meta["keys"])
-        deleted = (np.asarray(z["deleted"], bool) if "deleted" in z.files
-                   else np.zeros(meta["n"], bool))
-        idx._ensure_tombstones()
-        idx._deleted[: meta["n"]] = deleted
-        idx._key2id = {k: i for i, k in enumerate(idx._keys)
-                       if not idx._deleted[i]}
-        return idx
-
-    load_index = load
-    loadIndex = load
+    export_index = VectorIndex.export
+    exportIndex = VectorIndex.export
+    load_index = VectorIndex.load
+    loadIndex = VectorIndex.load

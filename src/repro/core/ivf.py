@@ -12,9 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import json
-import os
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -101,7 +98,11 @@ def _search(idx: IVFIndex, q: jax.Array, k: int, nprobe: int):
     d = ops.gather_distance(idx.vectors, q, ids, metric=idx.metric)
     d = jnp.where(valid, d, jnp.float32(3e38))
     neg, j = jax.lax.top_k(-d, k)
-    return jnp.take_along_axis(ids, j, axis=1), -neg
+    out_ids = jnp.take_along_axis(ids, j, axis=1)
+    # list-padding slots that reached the top-k (fewer live candidates
+    # than k) must not leak a clipped row id: mark them missing
+    out_ids = jnp.where(-neg >= jnp.float32(3e38), -1, out_ids)
+    return out_ids, -neg
 
 
 def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
@@ -111,7 +112,11 @@ def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
         q = q[None]
     if idx.metric == "cosine":
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-    ids, dists = _search(idx, q, k, min(nprobe, idx.centroids.shape[0]))
+    nprobe = min(nprobe, idx.centroids.shape[0])
+    # the probed lists expose at most nprobe*cap candidates; top_k cannot
+    # take more than that — callers pad the shortfall (protocol: k slots)
+    k = min(k, nprobe * idx.lists.shape[1])
+    ids, dists = _search(idx, q, k, nprobe)
     if squeeze:
         return ids[0], dists[0]
     return ids, dists
@@ -126,7 +131,15 @@ class IVFVectorIndex(VectorIndex):
     list at the next device pack (no tombstone needed in the search path
     because packing already excludes dead rows). The packed device index is
     rebuilt lazily after mutations.
+
+    Because centroids are *trained-once* state that depends on when the
+    first query ran (not only on the mutation history), training emits a
+    ``derived.centroids`` WAL record when a store is attached — WAL replay
+    then reproduces the exact centroids, keeping a warm restore bit-for-bit
+    equal to the live index (DESIGN.md §7).
     """
+
+    kind = "ivf"
 
     def __init__(self, *, metric: str = "cosine", dim: int | None = None,
                  nlist: int = 64, nprobe: int = 8, iters: int = 8,
@@ -159,7 +172,7 @@ class IVFVectorIndex(VectorIndex):
         self._idx = None
         self._bump_epoch()
 
-    def insert(self, key: str, value: Sequence[float]) -> None:
+    def _insert_impl(self, key: str, value: np.ndarray) -> None:
         v = np.asarray(value, np.float32).reshape(-1)
         if self.metric == "cosine":
             v = v / max(float(np.linalg.norm(v)), 1e-12)
@@ -168,10 +181,7 @@ class IVFVectorIndex(VectorIndex):
             self._vecs = np.zeros((0, self.dim), np.float32)
         self._append(key, v)
 
-    def bulk_insert(self, keys: Sequence[str], values) -> None:
-        values = np.asarray(values, np.float32)
-        if len(keys) != len(values):
-            raise ValueError("keys/values length mismatch")
+    def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
         if self.metric == "cosine":
             values = normalize_rows(values)
         for key in keys:
@@ -189,15 +199,28 @@ class IVFVectorIndex(VectorIndex):
         self._idx = None
         self._bump_epoch()
 
-    def update(self, key: str, value: Sequence[float]) -> None:
-        if key not in self._key2row:
-            raise KeyError(key)
-        self.insert(key, value)
+    def _update_impl(self, key: str, value: np.ndarray) -> None:
+        self._insert_impl(key, value)
 
-    def delete(self, key: str) -> None:
+    def _delete_impl(self, key: str) -> None:
         row = self._key2row.pop(key)
         self._alive[row] = False
         self._idx = None
+        self._bump_epoch()
+
+    def _compact_impl(self) -> None:
+        """Physically drop tombstoned rows (DESIGN.md §7). Centroids are
+        dropped too — they are aggregates over data that may include the
+        deleted rows (a singleton cluster's centroid IS the deleted
+        vector) — and retrain over live rows at the next pack."""
+        live = np.flatnonzero(self._alive)
+        self._vecs = np.ascontiguousarray(self._vecs[live])
+        self._keys = [self._keys[i] for i in live]
+        self._alive = np.ones(live.size, bool)
+        self._key2row = {k: i for i, k in enumerate(self._keys)}
+        self._centroids = None
+        self._idx = None
+        self._live_rows = None
         self._bump_epoch()
 
     # --------------------------------------------------------------- query
@@ -215,6 +238,14 @@ class IVFVectorIndex(VectorIndex):
             cent, assign = kmeans(jnp.asarray(v), nlist, self.iters, self.seed)
             self._centroids = np.asarray(cent)
             assign = np.asarray(assign)
+            # derived-state journaling (DESIGN.md §7): training happened at
+            # query time, outside the mutation history, so replay alone
+            # cannot reproduce it — log the trained centroids so a warm
+            # restore lands on the exact same coarse quantiser
+            if self._store is not None:
+                self._store.wal_append("derived.centroids",
+                                       epoch=self._epoch, meta={},
+                                       arrays={"centroids": self._centroids})
         else:
             cent = jnp.asarray(self._centroids)
             d = (np.sum(v * v, 1)[:, None] - 2 * v @ self._centroids.T
@@ -256,38 +287,49 @@ class IVFVectorIndex(VectorIndex):
         return self.query(query, k, nprobe=idx.centroids.shape[0])
 
     # --------------------------------------------------------- persistence
-    def export(self, path: str) -> None:
-        if not self._keys:
-            raise ValueError("index is empty")
-        meta = {"metric": self.metric, "dim": self.dim, "nlist": self.nlist,
-                "nprobe": self.nprobe, "keys": self._keys}
-        tmp = path + ".tmp.npz"
-        cent = (self._centroids if self._centroids is not None
-                else np.zeros((0, self.dim), np.float32))
-        np.savez_compressed(tmp[:-4], vectors=self._vecs, alive=self._alive,
-                            centroids=cent,
-                            meta=np.frombuffer(json.dumps(meta).encode(),
-                                               dtype=np.uint8))
-        os.replace(tmp, path)
+    def config_dict(self) -> dict:
+        return {"metric": self.metric, "dim": self.dim, "nlist": self.nlist,
+                "nprobe": self.nprobe, "iters": self.iters,
+                "seed": self.seed}
 
-    @classmethod
-    def load(cls, path: str) -> "IVFVectorIndex":
-        z = np.load(path, allow_pickle=False)
-        meta = json.loads(bytes(z["meta"]).decode())
-        idx = cls(metric=meta["metric"], dim=meta["dim"],
-                  nlist=meta["nlist"], nprobe=meta["nprobe"])
-        idx._vecs = np.asarray(z["vectors"], np.float32)
-        idx._alive = np.asarray(z["alive"], bool)
-        idx._keys = list(meta["keys"])
-        idx._key2row = {k: i for i, k in enumerate(idx._keys)
-                        if idx._alive[i]}
-        cent = np.asarray(z["centroids"], np.float32)
-        idx._centroids = cent if cent.size else None
-        return idx
+    def state_dict(self) -> tuple[dict, dict]:
+        cent = (self._centroids if self._centroids is not None
+                else np.zeros((0, self.dim or 0), np.float32))
+        arrays = {"vectors": self._vecs, "alive": self._alive,
+                  "centroids": cent}
+        meta = {"keys": list(self._keys), "epoch": self._epoch,
+                "has_centroids": self._centroids is not None}
+        return arrays, meta
+
+    def restore_state(self, arrays: dict, meta: dict) -> None:
+        self._vecs = np.asarray(arrays["vectors"], np.float32)
+        self._alive = np.asarray(arrays["alive"], bool)
+        if self._vecs.shape[1]:
+            self.dim = int(self._vecs.shape[1])
+        self._keys = list(meta["keys"])
+        self._key2row = {k: i for i, k in enumerate(self._keys)
+                         if self._alive[i]}
+        self._centroids = (np.asarray(arrays["centroids"], np.float32)
+                           if meta["has_centroids"] else None)
+        self._epoch = int(meta["epoch"])
+        self._idx = None
+        self._live_rows = None
+
+    def _apply_derived(self, op: str, meta: dict, arrays: dict) -> None:
+        if op != "derived.centroids":
+            raise ValueError(f"IVFVectorIndex cannot replay {op!r}")
+        self._centroids = np.asarray(arrays["centroids"], np.float32)
+        self._idx = None
+
+    def _row_count(self) -> int:
+        return len(self._keys)
 
     @property
     def size(self) -> int:
         return len(self._key2row)
+
+    def _contains(self, key: str) -> bool:
+        return key in self._key2row
 
     def keys(self) -> list[str]:
         return [k for i, k in enumerate(self._keys) if self._alive[i]]

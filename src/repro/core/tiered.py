@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
@@ -132,6 +131,8 @@ class TieredIndex(VectorIndex):
     queries between mutations.
     """
 
+    kind = "tiered"
+
     def __init__(self, *, metric: str = "cosine", M: int = 16,
                  ef_construction: int = 200, ef_search: int = 64,
                  cache_rows: int = 1024, prefetch_p: int | None = None,
@@ -145,29 +146,41 @@ class TieredIndex(VectorIndex):
         self.ef_search = ef_search
         self.cache_rows = cache_rows
         self.prefetch_p = prefetch_p
-        self._store: TieredVectorStore | None = None
+        # fast-tier cache; NOT the durability IndexStore (that is the
+        # base class's ``_store``)
+        self._tier_store: TieredVectorStore | None = None
         self._g: HNSWGraph | None = None
 
     # ------------------------------------------------------------ mutation
+    # NB: mutations delegate to the INNER index's impl layer — the inner
+    # HNSW is never store-attached (the outer TieredIndex owns WAL
+    # logging), so going through its public mutators would only repeat
+    # the validation the outer template method already did.
     def _invalidate(self):
-        self._store = None
+        self._tier_store = None
         self._g = None
         self._bump_epoch()
 
-    def insert(self, key: str, value: Sequence[float]) -> None:
-        self.inner.insert(key, value)
+    def _insert_impl(self, key: str, value: np.ndarray) -> None:
+        self.inner._insert_impl(key, value)
         self._invalidate()
 
-    def bulk_insert(self, keys: Sequence[str], values) -> None:
-        self.inner.bulk_insert(keys, values)
+    def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
+        self.inner._bulk_insert_impl(keys, values)
         self._invalidate()
 
-    def update(self, key: str, value: Sequence[float]) -> None:
-        self.inner.update(key, value)
+    def _update_impl(self, key: str, value: np.ndarray) -> None:
+        self.inner._update_impl(key, value)
         self._invalidate()
 
-    def delete(self, key: str) -> None:
-        self.inner.delete(key)
+    def _delete_impl(self, key: str) -> None:
+        self.inner._delete_impl(key)
+        self._invalidate()
+
+    def _compact_impl(self) -> None:
+        """Physically drop tombstoned rows: rebuild the inner graph over
+        live vectors (DESIGN.md §7) and re-warm the tiers lazily."""
+        self.inner._compact_impl()
         self._invalidate()
 
     # --------------------------------------------------------------- query
@@ -176,10 +189,10 @@ class TieredIndex(VectorIndex):
             raise ValueError("index is empty")
         if self._g is None:
             self._g = self.inner._builder.graph()
-            self._store = TieredVectorStore(self._g.vectors,
-                                            cache_rows=self.cache_rows,
-                                            prefetch_p=self.prefetch_p)
-        return self._g, self._store
+            self._tier_store = TieredVectorStore(self._g.vectors,
+                                                 cache_rows=self.cache_rows,
+                                                 prefetch_p=self.prefetch_p)
+        return self._g, self._tier_store
 
     @property
     def stats(self) -> TierStats:
@@ -210,22 +223,39 @@ class TieredIndex(VectorIndex):
         return self.inner.exact_query(query, k)
 
     # --------------------------------------------------------- persistence
-    def export(self, path: str) -> None:
-        self.inner.export(path)
+    def config_dict(self) -> dict:
+        return {"metric": self.metric, "M": self.inner.M,
+                "ef_construction": self.inner.ef_construction,
+                "ef_search": self.ef_search,
+                "cache_rows": self.cache_rows,
+                "prefetch_p": self.prefetch_p,
+                "seed": self.inner.seed,
+                "use_bulk_build": self.inner.use_bulk_build}
 
-    @classmethod
-    def load(cls, path: str, **kw) -> "TieredIndex":
-        from repro.core.interface import HNSW
-        inner = HNSW.load(path)
-        idx = cls(metric=inner.metric, M=inner.M,
-                  ef_construction=inner.ef_construction,
-                  ef_search=inner.ef_search, **kw)
-        idx.inner = inner
-        return idx
+    def state_dict(self) -> tuple[dict, dict]:
+        """The durable state IS the inner HNSW's (graph + tombstones +
+        RNG); the tier split is a runtime view re-derived on first query.
+        Only the outer epoch is added — it is what serving caches key on.
+        """
+        arrays, meta = self.inner.state_dict()
+        meta = dict(meta, outer_epoch=self._epoch)
+        return arrays, meta
+
+    def restore_state(self, arrays: dict, meta: dict) -> None:
+        self.inner.restore_state(arrays, meta)
+        self._epoch = int(meta["outer_epoch"])
+        self._tier_store = None
+        self._g = None
+
+    def _row_count(self) -> int:
+        return self.inner._row_count()
 
     @property
     def size(self) -> int:
         return self.inner.size
+
+    def _contains(self, key: str) -> bool:
+        return self.inner._contains(key)
 
     def keys(self) -> list[str]:
         return self.inner.keys()

@@ -43,6 +43,13 @@ def main():
                     help="RetrievalEngine bucket cap (power of two)")
     ap.add_argument("--retrieval-cache", type=int, default=1024,
                     help="RetrievalEngine LRU entries (0 disables)")
+    ap.add_argument("--store-dir", default=None,
+                    help="durable IndexStore directory (DESIGN.md §7): "
+                         "restarts restore the index warm — snapshot + "
+                         "WAL replay — instead of re-embedding the corpus")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="auto-snapshot the store every N mutations "
+                         "(0: only the final snapshot on exit)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -52,10 +59,24 @@ def main():
                          dtype=jnp.float32)
 
     if args.rag:
-        rag = RAGPipeline(index_kind=args.index,
+        store = None
+        if args.store_dir:
+            from repro.store import IndexStore
+            store = IndexStore(args.store_dir,
+                               snapshot_every=args.snapshot_every or None)
+        rag = RAGPipeline(index_kind=args.index, index_store=store,
                           retrieval_batch=args.retrieval_batch,
                           retrieval_cache=args.retrieval_cache)
-        rag.add_documents(BUILTIN_CORPUS)
+        if rag.index.size:
+            # warm restore: embeddings came back from the store (epoch
+            # included — the retrieval cache keys on it); only the text
+            # side-table needs repopulating
+            logger.info(
+                f"warm restore from {args.store_dir}: {rag.index.size} "
+                f"docs @ mutation_epoch {rag.index.mutation_epoch}")
+            rag.register_texts(BUILTIN_CORPUS)
+        else:
+            rag.add_documents(BUILTIN_CORPUS)
         queries = [["how does hnsw search work",
                     "why is on device retrieval private",
                     "what does efConstruction control"][i % 3]
@@ -74,6 +95,11 @@ def main():
             f"dispatches ({rs['searched_queries']} searched + "
             f"{rs['padded_queries']} bucket pad, "
             f"cache hit rate {rs['hit_rate']:.2f})")
+        if store is not None:
+            path = store.snapshot(rag.index)
+            logger.info(f"store snapshot: {path} "
+                        f"(epoch {rag.index.mutation_epoch}; next start "
+                        f"restores warm)")
         return
 
     rng = np.random.default_rng(args.seed)

@@ -46,14 +46,18 @@ class RAGPipeline:
                  index: VectorIndex | None = None,
                  index_kind: str = "hnsw",
                  store: DocumentStore | None = None,
+                 index_store=None,
                  template: str = DEFAULT_TEMPLATE,
                  generate_fn: Callable[[str], str] | None = None,
                  M: int = 16, ef_construction: int = 100,
                  retrieval_batch: int = 128, retrieval_cache: int = 1024):
+        # index_store: an ``IndexStore`` (or path) making the index durable
+        # (DESIGN.md §7) — a warm store restores the previous session's
+        # index, mutation_epoch included, instead of building a fresh one.
         self.encoder = encoder or HashingEncoder()
         self.index = index if index is not None else make_index(
-            index_kind, metric="cosine", dim=self.encoder.dim, M=M,
-            ef_construction=ef_construction)
+            index_kind, store=index_store, metric="cosine",
+            dim=self.encoder.dim, M=M, ef_construction=ef_construction)
         self.store = store or DocumentStore()
         self.template = template
         self.generate_fn = generate_fn
@@ -74,6 +78,16 @@ class RAGPipeline:
     def add_document(self, key: str, text: str):
         self.index.insert(key, self.encoder.encode(text)[0])
         self.store.add(key, text)
+
+    def register_texts(self, docs: list[tuple[str, str]]):
+        """Warm-restart companion to ``add_documents``: (re)populate the
+        text store WITHOUT touching the index. A warm-restored index
+        (``index_store=``) already holds the embeddings; re-inserting them
+        would burn WAL records and epoch bumps for nothing. Only documents
+        the index actually knows are registered."""
+        for k, t in docs:
+            if k in self.index:
+                self.store.add(k, t)
 
     def update_document(self, key: str, text: str):
         """Re-embed + replace an indexed document in place."""

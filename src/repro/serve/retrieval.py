@@ -20,6 +20,12 @@ one compiled dispatch. ``RetrievalEngine`` closes that gap:
     and drops the whole cache, so a retracted document can never be served
     from a stale entry — deletion stays the paper's first-class privacy
     operation even with caching in front of the index (DESIGN.md §6).
+    The epoch is durable: a store-backed index (DESIGN.md §7) restores at
+    the exact epoch it died at, and the engine adopts it at construction
+    (``_cache_epoch = index.mutation_epoch``) — never assume epoch 0 —
+    so cache-validity semantics survive process restarts, and an in-place
+    ``compact()`` (which bumps the epoch) flushes the cache like any other
+    mutation.
 
 Typical use (this is what ``RAGPipeline``/``ServeEngine.generate_rag`` do):
 

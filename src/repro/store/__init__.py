@@ -1,0 +1,9 @@
+# Durable on-device index store — the jax_pallas analog of MeMemo's
+# IndexedDB layer (DESIGN.md §7): write-ahead log + chunked snapshots +
+# secure-delete compaction, fronted by ``IndexStore``.
+from repro.store.snapshot import read_snapshot, write_snapshot
+from repro.store.store import IndexStore
+from repro.store.wal import WalCorruption, WriteAheadLog
+
+__all__ = ["IndexStore", "WriteAheadLog", "WalCorruption",
+           "read_snapshot", "write_snapshot"]

@@ -1,0 +1,285 @@
+"""``IndexStore`` — the durable home of one ``VectorIndex`` (DESIGN.md §7).
+
+MeMemo's IndexedDB layer is what lets the browser restart with the user's
+private index intact; this is its jax_pallas analog. One store directory
+owns one index:
+
+    store/
+      config.json          index kind + construction params (written once)
+      wal.log              write-ahead mutation log (store/wal.py)
+      snap_<epoch>/        chunked snapshots (store/snapshot.py), newest wins
+
+Lifecycle:
+
+    store = IndexStore("store/", snapshot_every=1000)
+    idx = make_index("hnsw", store=store)     # cold: attach; warm: restore
+    idx.insert/update/delete(...)             # WAL-logged before applying
+    store.snapshot(idx)                       # durable point; truncates WAL
+    ...crash...
+    idx = make_index("hnsw", store=IndexStore("store/"))   # snapshot + WAL
+                                              # replay == the live index,
+                                              # bit for bit, same epoch
+
+Invariants (tests/test_store.py):
+  * every mutation record lands in the WAL before index state changes;
+  * restore = latest snapshot + replay of WAL records whose
+    ``epoch`` (mutation_epoch before the op) >= the snapshot's epoch —
+    so a crash between "snapshot written" and "WAL truncated" replays
+    idempotently (stale records are skipped by epoch);
+  * ``compact()`` physically rewrites the store so tombstoned vectors'
+    bytes appear in NO file under the directory — deletion is physical,
+    not a tombstone bit (the privacy property).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+from repro.store import snapshot as snapmod
+from repro.store.wal import WalCorruption, WriteAheadLog
+
+CONFIG_NAME = "config.json"
+WAL_NAME = "wal.log"
+SNAP_PREFIX = "snap_"
+FORMAT_VERSION = 1
+
+
+class IndexStore:
+    """Durability orchestrator for one ``VectorIndex``.
+
+    Parameters
+    ----------
+    root:           store directory (created if absent).
+    snapshot_every: auto-snapshot after this many mutations (None = only
+                    explicit ``snapshot()`` calls; the WAL still makes
+                    every mutation durable in between).
+    keep:           snapshots retained by routine GC (compaction always
+                    purges down to one).
+    fsync:          fsync the WAL after every append (power-loss
+                    durability; off by default — process-crash durability
+                    only needs the flush).
+    page_bytes:     snapshot page size (store/snapshot.py).
+    """
+
+    def __init__(self, root: str, *, snapshot_every: int | None = None,
+                 keep: int = 2, fsync: bool = False,
+                 page_bytes: int = 4 << 20):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        if snapshot_every is not None and snapshot_every < 1:
+            raise ValueError("snapshot_every must be >= 1")
+        self.snapshot_every = snapshot_every
+        self.keep = max(int(keep), 1)
+        self.page_bytes = page_bytes
+        self.wal = WriteAheadLog(os.path.join(self.root, WAL_NAME),
+                                 fsync=fsync)
+        self._since_snapshot = 0
+
+    # ----------------------------------------------------------- listing
+    def _config_path(self) -> str:
+        return os.path.join(self.root, CONFIG_NAME)
+
+    def has_state(self) -> bool:
+        """True once an index has ever been attached here — the signal
+        ``make_index(store=...)`` uses to restore instead of create."""
+        return os.path.exists(self._config_path())
+
+    def snapshots(self) -> list[str]:
+        """Published snapshot directory names, oldest -> newest (the
+        zero-padded epoch in the name makes lexical order epoch order)."""
+        out = []
+        for d in sorted(os.listdir(self.root)):
+            if (d.startswith(SNAP_PREFIX) and not d.endswith(".tmp")
+                    and os.path.exists(os.path.join(
+                        self.root, d, snapmod.MANIFEST_NAME))):
+                out.append(d)
+        return out
+
+    # ------------------------------------------------------------ attach
+    def attach(self, index) -> None:
+        """Bind ``index`` to this store: future mutations are WAL-logged.
+        Writes ``config.json`` on first attach; later attaches validate
+        the stored kind."""
+        cfgp = self._config_path()
+        if not os.path.exists(cfgp):
+            cfg = {"format_version": FORMAT_VERSION, "kind": index.kind,
+                   "params": index.config_dict()}
+            tmp = cfgp + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(cfg, f, indent=1)
+            os.replace(tmp, cfgp)
+        else:
+            with open(cfgp) as f:
+                stored = json.load(f)
+            if stored["kind"] != index.kind:
+                raise ValueError(
+                    f"store at {self.root} holds a {stored['kind']!r} "
+                    f"index; cannot attach a {index.kind!r}")
+        index._store = self
+        self._since_snapshot = 0
+
+    # --------------------------------------------------------------- WAL
+    def wal_append(self, op: str, *, epoch: int, meta: dict | None = None,
+                   arrays: dict | None = None) -> None:
+        self.wal.append(op, epoch=epoch, meta=meta, arrays=arrays)
+
+    def notify_mutation(self, index) -> None:
+        """Called by the index after every applied mutation; drives the
+        ``snapshot_every`` policy."""
+        self._since_snapshot += 1
+        if (self.snapshot_every is not None
+                and self._since_snapshot >= self.snapshot_every):
+            self.snapshot(index)
+
+    # ---------------------------------------------------------- snapshot
+    def snapshot(self, index) -> str | None:
+        """Write a durable snapshot of ``index`` and truncate the WAL
+        (its records are now redundant). Crash-ordering: the snapshot is
+        published (atomic rename) BEFORE the WAL is cut, and replay skips
+        records the snapshot already covers — so dying between the two
+        steps is harmless."""
+        if index._row_count() == 0 and index.mutation_epoch == 0:
+            return None                       # nothing ever happened
+        epoch = index.mutation_epoch
+        path = os.path.join(self.root, f"{SNAP_PREFIX}{epoch:012d}")
+        if os.path.exists(path):
+            # a snapshot at this epoch is already durable. Do NOT touch
+            # the WAL: it may hold derived.* records (IVF centroid
+            # training) logged SINCE that snapshot without bumping the
+            # epoch — resetting would silently lose them and break the
+            # bit-for-bit restore invariant. GC (old snapshots + crash
+            # debris) is WAL-independent and still runs.
+            self._gc()
+            self._since_snapshot = 0
+            return path
+        arrays, meta = index.state_dict()
+        snapmod.write_snapshot(
+            path, kind=index.kind, config=index.config_dict(),
+            epoch=epoch, arrays=arrays, meta=meta,
+            page_bytes=self.page_bytes)
+        self.wal.reset()
+        self._gc()
+        self._since_snapshot = 0
+        return path
+
+    def _gc(self) -> None:
+        snaps = self.snapshots()
+        for d in snaps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+        for d in os.listdir(self.root):       # crash debris from mid-write
+            if d.startswith(SNAP_PREFIX) and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.root, d),
+                              ignore_errors=True)
+
+    # ----------------------------------------------------------- restore
+    def load_index(self, expect_kind: str | None = None):
+        """Warm restore: latest snapshot + WAL replay, then attach.
+
+        The result is bit-for-bit equal to the index that was live when
+        the last WAL record landed — including ``mutation_epoch``, so
+        epoch-keyed consumers (the RetrievalEngine LRU, DESIGN.md §6)
+        keep their invalidation semantics across restarts."""
+        from repro.core.index import make_index
+
+        cfgp = self._config_path()
+        if not os.path.exists(cfgp):
+            raise FileNotFoundError(
+                f"store at {self.root} has no {CONFIG_NAME}; "
+                "nothing to restore")
+        with open(cfgp) as f:
+            cfg = json.load(f)
+        if expect_kind is not None and cfg["kind"] != expect_kind:
+            raise ValueError(
+                f"store at {self.root} holds a {cfg['kind']!r} index, "
+                f"not {expect_kind!r}")
+        idx = make_index(cfg["kind"], **cfg["params"])
+
+        snaps = self.snapshots()
+        if snaps:
+            manifest, arrays = snapmod.read_snapshot(
+                os.path.join(self.root, snaps[-1]))
+            idx.restore_state(arrays, manifest["meta"])
+            if idx.mutation_epoch != manifest["epoch"]:
+                raise WalCorruption(
+                    f"snapshot {snaps[-1]} meta epoch "
+                    f"{manifest['epoch']} != restored index epoch "
+                    f"{idx.mutation_epoch}")
+
+        self.wal.repair()                     # cut any torn tail record
+        for header, arrays in self.wal.records():
+            ep = int(header["epoch"])
+            if ep < idx.mutation_epoch:
+                continue                      # already inside the snapshot
+            if ep > idx.mutation_epoch:
+                raise WalCorruption(
+                    f"WAL gap: record epoch {ep} is ahead of index epoch "
+                    f"{idx.mutation_epoch}")
+            try:
+                self._apply(idx, header, arrays)
+            except WalCorruption:
+                raise
+            except Exception:
+                # records land BEFORE the impl applies, so an op that
+                # raised live (e.g. a dim-mismatched insert the caller
+                # caught) left exactly this record behind with no state
+                # change — the deterministic impl raises identically
+                # here and the op stays skipped. The epoch-gap check on
+                # the FOLLOWING records still fails loudly if the op had
+                # actually applied live (true divergence).
+                continue
+        self.attach(idx)
+        return idx
+
+    @staticmethod
+    def _apply(idx, header: dict, arrays: dict) -> None:
+        """Re-run one logged mutation through the SAME implementation path
+        the live op took (the ``*_impl`` layer — below validation and
+        below WAL logging, so replay never re-logs)."""
+        op, meta = header["op"], header["meta"]
+        if op == "insert":
+            idx._insert_impl(meta["key"], arrays["vec"])
+        elif op == "bulk_insert":
+            idx._bulk_insert_impl(list(meta["keys"]), arrays["vec"])
+        elif op == "update":
+            idx._update_impl(meta["key"], arrays["vec"])
+        elif op == "delete":
+            idx._delete_impl(meta["key"])
+        elif op.startswith("derived."):
+            idx._apply_derived(op, meta, arrays)
+        else:
+            raise WalCorruption(f"unknown WAL op {op!r}")
+
+    # --------------------------------------------------------- compaction
+    def compact(self, index) -> None:
+        """Secure-delete compaction (DESIGN.md §7): physically rewrite the
+        store so tombstoned vectors exist in NO file underneath it.
+
+        1. ``index.compact()`` drops dead rows from the in-memory index
+           (HNSW rebuilds its graph over live rows) and bumps the epoch —
+           epoch-keyed caches over this index invalidate themselves.
+        2. A fresh snapshot of the compacted state is published
+           (``on_compact``, which ``index.compact()`` itself triggers on
+           an attached index — calling either entry point is safe).
+        3. The WAL is truncated (old records held the deleted vectors'
+           insert payloads) and EVERY other snapshot is purged.
+
+        If the process dies mid-way the store stays consistent (restore
+        uses whatever snapshot is newest + the WAL), but files written
+        before the crash may still hold deleted bytes — compaction only
+        guarantees physical erasure once it returns."""
+        if index._store is not self:
+            self.attach(index)
+        index.compact()                       # template -> on_compact(self)
+
+    def on_compact(self, index) -> None:
+        """Post-compaction hook invoked by ``VectorIndex.compact`` on an
+        attached index: compaction is not WAL-logged (its epoch bumps
+        would otherwise be an unreplayable gap), so the compacted state
+        must become durable HERE, atomically with the old files' purge."""
+        self.snapshot(index)                  # fresh epoch: writes + resets
+        keep = f"{SNAP_PREFIX}{index.mutation_epoch:012d}"
+        for d in os.listdir(self.root):
+            if d.startswith(SNAP_PREFIX) and d != keep:
+                shutil.rmtree(os.path.join(self.root, d),
+                              ignore_errors=True)

@@ -1,0 +1,428 @@
+"""Durable store suite (DESIGN.md §7): snapshot + WAL replay bit-for-bit
+equality per backend, crash recovery (torn WAL records, kill between
+snapshot and WAL truncation, replay idempotence), secure-delete
+compaction byte absence, the snapshot_every policy, warm restore through
+``make_index(store=...)``, and the export/load tombstone regression."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import INDEX_KINDS, make_index
+from repro.core.hnsw_build import normalize_rows
+from repro.data.synthetic import make_corpus
+from repro.serve.retrieval import RetrievalEngine
+from repro.store import IndexStore, WriteAheadLog
+from repro.store.wal import FILE_MAGIC
+
+KINDS = list(INDEX_KINDS)
+DIM = 16
+CFG = dict(dim=DIM, metric="cosine", M=8, ef_construction=40, ef_search=32)
+
+DATA = make_corpus(60, DIM, seed=0)
+EXTRA = make_corpus(12, DIM, seed=1)
+
+
+def fresh(kind, td, **store_kw):
+    store = IndexStore(os.path.join(td, "store"), **store_kw)
+    return make_index(kind, store=store, **CFG), store
+
+
+def seed_mutations(idx):
+    """Phase 1: the mutation history a snapshot will cover."""
+    idx.bulk_insert([f"d{i}" for i in range(60)], DATA)
+    idx.insert("solo", EXTRA[0])
+    idx.update("d5", EXTRA[1])
+    idx.delete("d9")
+    idx.delete("d40")
+
+
+def tail_mutations(idx):
+    """Phase 2: the WAL tail replay must reproduce."""
+    for j in range(2, 8):
+        idx.insert(f"e{j}", EXTRA[j])
+    idx.update("e3", EXTRA[8])
+    idx.insert("d5", EXTRA[9])           # upsert of an existing key
+    idx.delete("d17")
+
+
+def assert_bit_for_bit(a, b):
+    """The acceptance assertion: identical mutation-determined host state
+    (array bytes, keys, epoch, HNSW RNG state) AND identical queries."""
+    assert type(a) is type(b)
+    aa, am = a.state_dict()
+    ba, bm = b.state_dict()
+    assert set(aa) == set(ba)
+    for name in aa:
+        x, y = np.asarray(aa[name]), np.asarray(ba[name])
+        assert x.dtype == y.dtype and x.shape == y.shape, name
+        assert x.tobytes() == y.tobytes(), f"array {name!r} differs"
+    assert am == bm
+    assert a.mutation_epoch == b.mutation_epoch
+    assert a.keys() == b.keys()
+    q = DATA[:5]
+    ka, da = a.query_batch(q, 6)
+    kb, db = b.query_batch(q, 6)
+    assert ka == kb
+    assert np.asarray(da).tobytes() == np.asarray(db).tobytes()
+
+
+def walk_bytes(root):
+    for dp, _, fns in os.walk(root):
+        for fn in fns:
+            p = os.path.join(dp, fn)
+            with open(p, "rb") as f:
+                yield p, f.read()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: snapshot + WAL replay == live index, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_snapshot_plus_wal_replay_bit_for_bit(kind, tmp_path):
+    idx, store = fresh(kind, tmp_path)
+    seed_mutations(idx)
+    store.snapshot(idx)
+    idx.query(DATA[0], k=3)              # ivf: trains + logs centroids
+    tail_mutations(idx)
+
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(idx, restored)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_wal_only_restore_without_any_snapshot(kind, tmp_path):
+    idx, store = fresh(kind, tmp_path)
+    seed_mutations(idx)
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(idx, restored)
+
+
+def test_hnsw_bulk_build_path_replays_deterministically(tmp_path):
+    store = IndexStore(os.path.join(tmp_path, "store"))
+    idx = make_index("hnsw", store=store, use_bulk_build=True, **CFG)
+    idx.bulk_insert([f"d{i}" for i in range(60)], DATA)
+    idx.delete("d7")
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(idx, restored)
+
+
+def test_restored_epoch_not_zero_and_monotonic(tmp_path):
+    idx, store = fresh("flat", tmp_path)
+    seed_mutations(idx)
+    e = idx.mutation_epoch
+    assert e > 0
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert restored.mutation_epoch == e
+    restored.insert("post", EXTRA[0])
+    assert restored.mutation_epoch == e + 1
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["flat", "hnsw"])
+def test_kill_mid_wal_append_truncated_record(kind, tmp_path):
+    """A crash mid-append leaves a torn tail record: replay must stop at
+    the last intact record — i.e. restore the state just before the op
+    that was being logged — and repair the file for future appends."""
+    idx, store = fresh(kind, tmp_path)
+    seed_mutations(idx)
+    wal_path = store.wal.path
+    size_before = os.path.getsize(wal_path)
+    idx.insert("torn", EXTRA[2])         # the op whose record we mangle
+    store.wal.close()
+    with open(wal_path, "r+b") as f:     # cut mid-record: frame + 10 bytes
+        f.truncate(size_before + 10)
+
+    # reference timeline: everything except the torn op
+    ref, _ = fresh(kind, tmp_path / "ref")
+    seed_mutations(ref)
+
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(ref, restored)
+    assert "torn" not in restored
+    # the log was repaired: appending + restoring again works cleanly
+    restored.insert("after-crash", EXTRA[3])
+    again = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(restored, again)
+
+
+def test_kill_between_snapshot_and_wal_truncation(tmp_path):
+    """If the process dies after the snapshot directory is published but
+    before the WAL is truncated, every WAL record is still present though
+    the snapshot already covers a prefix — replay must skip the covered
+    records by epoch and reapply only the genuine tail."""
+    idx, store = fresh("hnsw", tmp_path)
+    seed_mutations(idx)
+    with open(store.wal.path, "rb") as f:
+        full_wal = f.read()              # as if truncation never happened
+    store.snapshot(idx)                  # publishes snapshot, resets WAL
+    store.wal.close()
+    with open(store.wal.path, "wb") as f:
+        f.write(full_wal)                # simulate the crash ordering
+
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(idx, restored)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_replay_is_idempotent(kind, tmp_path):
+    """Loading twice from the same store yields identical indexes and
+    never mutates the store (replay re-enters below the WAL-logging
+    layer)."""
+    idx, store = fresh(kind, tmp_path)
+    seed_mutations(idx)
+    store.snapshot(idx)
+    tail_mutations(idx)
+    wal_size = os.path.getsize(store.wal.path)
+    r1 = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    r2 = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    # loading appends nothing (querying an ATTACHED ivf index later may,
+    # legitimately: centroid training logs a derived record)
+    assert os.path.getsize(store.wal.path) == wal_size
+    assert_bit_for_bit(r1, r2)
+
+
+def test_crashed_snapshot_tmp_dir_is_ignored_and_collected(tmp_path):
+    idx, store = fresh("flat", tmp_path)
+    seed_mutations(idx)
+    store.snapshot(idx)
+    junk = os.path.join(tmp_path, "store", "snap_999999999999.tmp")
+    os.makedirs(junk)
+    with open(os.path.join(junk, "vectors.00000.npz"), "wb") as f:
+        f.write(b"partial garbage")
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert_bit_for_bit(idx, restored)
+    restored._store.snapshot(restored)   # GC sweeps the crash debris
+    assert not os.path.exists(junk)
+
+
+def test_torn_first_wal_write_recovers_to_empty(tmp_path):
+    store = IndexStore(os.path.join(tmp_path, "store"))
+    idx = make_index("flat", store=store, **CFG)     # attach: config.json
+    store.wal.close()
+    with open(store.wal.path, "wb") as f:
+        f.write(FILE_MAGIC[:2])          # crash during the very first write
+    restored = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert restored.size == 0 and restored.mutation_epoch == 0
+    restored.insert("first", EXTRA[0])   # log is usable again post-repair
+    again = IndexStore(os.path.join(tmp_path, "store")).load_index()
+    assert again.keys() == ["first"]
+
+
+def test_wal_record_framing_roundtrip(tmp_path):
+    wal = WriteAheadLog(os.path.join(tmp_path, "w.log"))
+    vec = np.arange(8, dtype=np.float32)
+    wal.append("insert", epoch=3, meta={"key": "k\n1"},  # newline in key
+               arrays={"vec": vec})
+    wal.append("delete", epoch=4, meta={"key": "k2"})
+    recs = list(wal.records())
+    assert [h["op"] for h, _ in recs] == ["insert", "delete"]
+    assert recs[0][0]["meta"]["key"] == "k\n1"
+    assert np.array_equal(recs[0][1]["vec"], vec)
+    assert recs[1][0]["epoch"] == 4 and recs[1][1] == {}
+
+
+# ---------------------------------------------------------------------------
+# secure-delete compaction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_secure_delete_bytes_absent(kind, tmp_path):
+    """Acceptance: after compaction, a deleted vector's bytes — the raw
+    WAL payload AND every normalized stored form (f32-batch and
+    f64-scalar normalization differ in the last bit) — appear in no file
+    under the store directory, and neither does its key."""
+    v = DATA[7]
+    targets = {v.tobytes(),
+               normalize_rows(DATA[7:8])[0].astype(np.float32).tobytes(),
+               (v / max(float(np.linalg.norm(v)), 1e-12)
+                ).astype(np.float32).tobytes()}
+
+    idx, store = fresh(kind, tmp_path, page_bytes=1024)  # force many pages
+    idx.bulk_insert([f"d{i}" for i in range(60)], DATA)
+    store.snapshot(idx)
+    idx.insert("late", EXTRA[0])         # keeps a live record in the WAL
+
+    # sanity: before compaction the vector's bytes ARE on disk
+    assert any(t in b for t in targets for _, b in walk_bytes(store.root))
+
+    idx.delete("d7")
+    store.compact(idx)
+
+    for path, blob in walk_bytes(store.root):
+        for t in targets:
+            assert t not in blob, f"bytes of d7 survive in {path}"
+        assert b'"d7"' not in blob, f"key d7 survives in {path}"
+
+    restored = IndexStore(store.root).load_index()
+    assert_bit_for_bit(idx, restored)
+    assert restored.size == 60           # 60 - d7 + late
+    keys, _ = restored.query(DATA[8], k=5)
+    assert keys[0] == "d8" and "d7" not in keys
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_compact_preserves_live_set_and_bumps_epoch(kind, tmp_path):
+    idx, store = fresh(kind, tmp_path)
+    seed_mutations(idx)
+    live_before = set(idx.keys())
+    epoch_before = idx.mutation_epoch
+    store.compact(idx)
+    assert idx.mutation_epoch > epoch_before
+    assert set(idx.keys()) == live_before
+    assert idx._row_count() == idx.size  # no tombstoned rows remain
+    keys, _ = idx.query(DATA[3], k=5)
+    assert keys[0] == "d3"
+    assert len(store.snapshots()) == 1   # exactly the compacted snapshot
+
+
+def test_compact_invalidates_retrieval_cache(tmp_path):
+    idx, store = fresh("flat", tmp_path)
+    seed_mutations(idx)
+    eng = RetrievalEngine(idx, max_batch=8)
+    r1 = eng.retrieve_one(DATA[3], k=3)
+    r2 = eng.retrieve_one(DATA[3], k=3)
+    assert r2.from_cache and r1.keys == r2.keys
+    store.compact(idx)                   # epoch bump must flush the LRU
+    r3 = eng.retrieve_one(DATA[3], k=3)
+    assert not r3.from_cache
+    assert eng.stats.invalidations == 1
+
+
+def test_failed_mutation_after_wal_append_does_not_poison_restore(tmp_path):
+    """An op can raise AFTER its record landed (log-before-apply): the
+    caller may catch it and keep going. Replay must reproduce that — the
+    record is skipped because the deterministic impl raises identically —
+    instead of bricking every future restore."""
+    idx, store = fresh("flat", tmp_path)
+    idx.insert("a", EXTRA[0])
+    with pytest.raises(ValueError):
+        idx.insert("bad", np.ones(7, np.float32))    # dim 7 != 16
+    idx.insert("b", EXTRA[1])                        # app continues
+    restored = IndexStore(store.root).load_index()
+    assert_bit_for_bit(idx, restored)
+    assert restored.keys() == ["a", "b"]
+
+
+def test_public_compact_on_attached_index_stays_durable(tmp_path):
+    """idx.compact() (not just IndexStore.compact) on an attached index
+    must trigger the store's compaction hook: otherwise its epoch bumps
+    are an unreplayable WAL gap and the deleted bytes stay on disk."""
+    idx, store = fresh("flat", tmp_path)
+    seed_mutations(idx)
+    idx.compact()                                    # public entry point
+    idx.insert("after", EXTRA[2])                    # post-compact WAL tail
+    restored = IndexStore(store.root).load_index()   # no WalCorruption
+    assert_bit_for_bit(idx, restored)
+    assert len(store.snapshots()) == 1               # compacted snapshot only
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_compact_to_empty_live_set(kind, tmp_path):
+    """Compacting away the LAST document is the core secure-delete case
+    and must not crash snapshotting (HNSW serializes the no-builder
+    state); the emptied store restores at the right epoch and accepts
+    new writes."""
+    idx, store = fresh(kind, tmp_path)
+    idx.insert("only", EXTRA[0])
+    idx.delete("only")
+    store.compact(idx)
+    assert idx.size == 0 and idx.mutation_epoch > 0
+    for _, blob in walk_bytes(store.root):
+        assert EXTRA[0].tobytes() not in blob
+    restored = IndexStore(store.root).load_index()
+    assert restored.size == 0
+    assert restored.mutation_epoch == idx.mutation_epoch
+    restored.insert("reborn", EXTRA[1])
+    again = IndexStore(store.root).load_index()
+    assert again.keys() == ["reborn"]
+
+
+def test_same_epoch_snapshot_keeps_derived_centroid_records(tmp_path):
+    """IVF centroid training logs a derived record WITHOUT bumping the
+    epoch. A second snapshot() at the same epoch must not reset the WAL,
+    or the trained centroids would be lost and the restored index would
+    silently diverge from the live one."""
+    idx, store = fresh("ivf", tmp_path)
+    idx.bulk_insert([f"d{i}" for i in range(20)], DATA[:20])
+    store.snapshot(idx)                  # epoch E, has_centroids=False
+    idx.query(DATA[0], k=3)              # trains + logs derived.centroids
+    store.snapshot(idx)                  # same epoch E: must keep the WAL
+    idx.insert("tail", EXTRA[0])
+    restored = IndexStore(store.root).load_index()
+    assert restored._centroids is not None
+    assert_bit_for_bit(idx, restored)
+
+
+# ---------------------------------------------------------------------------
+# policies + factory integration
+# ---------------------------------------------------------------------------
+def test_snapshot_every_policy_auto_snapshots(tmp_path):
+    idx, store = fresh("flat", tmp_path, snapshot_every=5)
+    for j in range(12):
+        idx.insert(f"a{j}", EXTRA[j % len(EXTRA)])
+    snaps = store.snapshots()
+    assert len(snaps) == 2               # at mutations 5 and 10, keep=2
+    # only the records since the last auto-snapshot remain in the WAL
+    assert sum(1 for _ in store.wal.records()) == 2
+    restored = IndexStore(store.root).load_index()
+    assert_bit_for_bit(idx, restored)
+
+
+def test_make_index_store_cold_then_warm(tmp_path):
+    sd = os.path.join(tmp_path, "s")
+    idx = make_index("hnsw", store=sd, **CFG)        # cold: creates+attaches
+    assert idx.size == 0 and os.path.exists(os.path.join(sd, "config.json"))
+    seed_mutations(idx)
+    warm = make_index("hnsw", store=sd, **CFG)       # warm: restores
+    assert_bit_for_bit(idx, warm)
+
+
+def test_make_index_store_kind_mismatch_raises(tmp_path):
+    sd = os.path.join(tmp_path, "s")
+    make_index("flat", store=sd, **CFG)
+    with pytest.raises(ValueError, match="holds a 'flat'"):
+        make_index("hnsw", store=sd, **CFG)
+
+
+def test_retrieval_engine_adopts_restored_epoch(tmp_path):
+    """Warm serve restore (DESIGN.md §6/§7): the engine must key its cache
+    on the RESTORED epoch, and a post-restore delete must invalidate."""
+    idx, store = fresh("hnsw", tmp_path)
+    seed_mutations(idx)
+    store.snapshot(idx)
+
+    restored = IndexStore(store.root).load_index()
+    assert restored.mutation_epoch > 0
+    eng = RetrievalEngine(restored, max_batch=8)
+    assert eng._cache_epoch == restored.mutation_epoch
+    r1 = eng.retrieve_one(DATA[3], k=3)
+    assert eng.retrieve_one(DATA[3], k=3).from_cache
+    top = r1.keys[0]
+    restored.delete(top)                 # retraction after the restart
+    r3 = eng.retrieve_one(DATA[3], k=3)
+    assert not r3.from_cache and top not in r3.keys
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: export/load keeps tombstones on a MUTATED index
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_export_load_after_deletes_matches_live(kind, tmp_path):
+    """export -> load -> query must match the live index exactly after a
+    mutation history with deletes and updates — in particular the
+    tombstone mask must round-trip on every backend."""
+    idx = make_index(kind, **CFG)
+    seed_mutations(idx)
+    tail_mutations(idx)
+    p = os.path.join(tmp_path, "idx.npz")
+    idx.export(p)
+    loaded = type(idx).load(p)
+    assert_bit_for_bit(idx, loaded)
+    for gone in ("d9", "d40", "d17"):
+        assert gone not in loaded
+        keys, _ = loaded.query(DATA[int(gone[1:])], k=10)
+        assert gone not in keys
+    exact, _ = loaded.exact_query(DATA[9], k=10)
+    assert "d9" not in exact
