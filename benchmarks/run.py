@@ -16,7 +16,8 @@ import os
 import sys
 import time
 
-SUITES = ["build", "query", "tiered", "rag", "serve", "store", "roofline"]
+SUITES = ["build", "query", "tiered", "rag", "serve", "store", "shard",
+          "roofline"]
 
 
 def main() -> None:

@@ -1,9 +1,15 @@
-"""Distributed retrieval: DB rows sharded over the whole mesh, per-shard
-top-k + hierarchical merge (DESIGN.md §4, "Retrieval").
+"""Distributed retrieval over a STATIC array: DB rows sharded over the
+whole mesh, per-shard top-k + hierarchical merge (DESIGN.md §4/§8).
 
 This is the pod-scale version of the paper's on-device search: "on-device"
 becomes "on-pod" — the whole corpus lives in pod HBM, no external vector
 service is consulted, and a query costs one log-depth top-k tree reduction.
+
+The MUTABLE generalization of this helper lives in ``core/sharded.py``:
+``ShardedRows`` adds keyed CRUD, deterministic key->shard routing, and
+per-shard free-slot bookkeeping on top of the same fan-out/merge dataflow,
+and is what the ``VectorIndex`` backends are built on. This module stays
+as the thin static-array entry point the dry-run/HLO tooling uses.
 """
 from __future__ import annotations
 
@@ -24,14 +30,28 @@ def sharded_flat_topk(mesh: Mesh, db: jax.Array, queries: jax.Array, k: int,
                       wire_bf16: bool = False) -> tuple[jax.Array, jax.Array]:
     """db [N, D] (rows sharded over every mesh axis), queries [B, D]
     (replicated) -> (dists [B, k], global ids [B, k]) replicated.
+
+    N need not be a multiple of the shard count: the DB is padded up to
+    one with sentinel rows whose ids are masked to (-1, INF) BEFORE the
+    merge — previously ``n // n_shards`` silently dropped the trailing
+    ``N mod S`` rows from the search. Because the sentinel rows' vector
+    payload is zeros (their distances can rank arbitrarily well, e.g.
+    cosine distance 1.0), each shard over-fetches ``k + pad`` local
+    candidates, masks, and re-selects k — padding can therefore never
+    displace a real row from the local top-k.
     """
     axes = tuple(mesh.axis_names)
     n = db.shape[0]
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    rows_per = n // n_shards
+    rows_per = -(-n // n_shards)               # ceil: nothing dropped
+    pad = rows_per * n_shards - n
+    if pad:
+        db = jnp.concatenate(
+            [db, jnp.zeros((pad, db.shape[1]), db.dtype)], axis=0)
 
     def local(db_l, q_l):
-        d, i = ops.flat_topk(db_l, q_l.astype(db_l.dtype), k, metric=metric)
+        kk = min(rows_per, k + pad)
+        d, i = ops.flat_topk(db_l, q_l.astype(db_l.dtype), kk, metric=metric)
         if wire_bf16:
             # genuinely bf16 from the source: leaves XLA no convert to
             # commute above the merge all-gathers (wire bytes halve)
@@ -40,6 +60,13 @@ def sharded_flat_topk(mesh: Mesh, db: jax.Array, queries: jax.Array, k: int,
         for a in axes:                       # row-major flattened shard index
             shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
         i = i + shard_id * rows_per
+        # sentinel mask: padded rows (global id >= n) must not reach the
+        # merge — their distance becomes +inf and their id -1
+        from repro.core.sharded import trim_merge_width
+        sentinel = i >= n
+        d = jnp.where(sentinel, jnp.asarray(jnp.inf, d.dtype), d)
+        i = jnp.where(sentinel, -1, i)
+        d, i = trim_merge_width(d, i, k, jnp.asarray(jnp.inf, d.dtype))
         # innermost axis first: smallest hop first in the merge tree
         return hierarchical_topk(d, i, k, tuple(reversed(axes)), wire_bf16)
 

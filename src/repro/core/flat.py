@@ -8,8 +8,12 @@ Two layers here:
   * ``FlatIndex`` — the immutable device-array core (kept as-is: it is the
     oracle other backends call into);
   * ``FlatVectorIndex`` — the keyed, mutable ``VectorIndex`` backend
-    (DESIGN.md §1): host-side storage with tombstones, device array
-    rebuilt lazily from live rows on the first query after a mutation.
+    (DESIGN.md §1), built on the shard-aware ``ShardedRows`` substrate
+    (DESIGN.md §8): rows live in per-shard device blocks routed by key
+    hash, queries fan out to every shard and merge through the
+    hierarchical top-k tree. With ``n_shards=1`` (the default) the
+    substrate collapses to the historical single-device path —
+    bit-for-bit, so the existing suite doubles as the parity oracle.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import numpy as np
 
 from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
+from repro.core.sharded import ShardedRows
 from repro.kernels import ops
 
 
@@ -68,131 +73,99 @@ def _pad_results(keys: list[list], d: np.ndarray, k: int
 
 class FlatVectorIndex(VectorIndex):
     """Mutable keyed flat index. Exact by construction, so ``query`` and
-    ``exact_query`` coincide. Mutations mark the device array stale; the
-    next query compacts live rows host-side and re-uploads once."""
+    ``exact_query`` coincide. Storage, key->shard routing, and free-slot
+    bookkeeping live in ``ShardedRows``; mutations mark the device
+    block(s) stale and the next query re-packs once (DESIGN.md §8)."""
 
     kind = "flat"
 
-    def __init__(self, *, metric: str = "cosine", dim: int | None = None):
+    def __init__(self, *, metric: str = "cosine", dim: int | None = None,
+                 n_shards: int = 1):
         if metric not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown metric {metric!r}")
         self.metric = metric
         self.dim = dim
-        self._vecs = np.zeros((0, dim or 0), np.float32)   # raw host vectors
-        self._keys: list[str] = []                         # row -> key
-        self._key2row: dict[str, int] = {}
-        self._alive = np.zeros(0, bool)
-        self._flat: FlatIndex | None = None                # device cache
-        self._live_rows: np.ndarray | None = None
+        self.n_shards = int(n_shards)
+        self._rows = ShardedRows(n_shards=self.n_shards, metric=metric,
+                                 dim=dim, normalize_on_pack=True)
 
     # ------------------------------------------------------------ mutation
     def _insert_impl(self, key: str, value: np.ndarray) -> None:
-        v = np.asarray(value, np.float32).reshape(-1)
-        if self.dim is None:
-            self.dim = v.shape[0]
-            self._vecs = np.zeros((0, self.dim), np.float32)
-        if key in self._key2row:
-            self._alive[self._key2row[key]] = False
-        row = len(self._keys)
-        self._vecs = np.concatenate([self._vecs, v[None]])
-        self._keys.append(key)
-        self._alive = np.concatenate([self._alive, np.ones(1, bool)])
-        self._key2row[key] = row
-        self._flat = None
+        self._rows.upsert(key, np.asarray(value, np.float32).reshape(-1))
+        self.dim = self._rows.dim
         self._bump_epoch()
 
     def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
-        for key in keys:
-            if key in self._key2row:
-                self._alive[self._key2row[key]] = False
-        if self.dim is None:
-            self.dim = values.shape[1]
-            self._vecs = np.zeros((0, self.dim), np.float32)
-        base = len(self._keys)
-        self._vecs = np.concatenate([self._vecs, values])
-        self._keys.extend(keys)
-        self._alive = np.concatenate([self._alive, np.ones(len(keys), bool)])
-        for j, key in enumerate(keys):
-            self._key2row[key] = base + j
-        self._flat = None
+        self._rows.upsert_many(keys, values)
+        self.dim = self._rows.dim
         self._bump_epoch()
 
     def _update_impl(self, key: str, value: np.ndarray) -> None:
         self._insert_impl(key, value)
 
     def _delete_impl(self, key: str) -> None:
-        row = self._key2row.pop(key)
-        self._alive[row] = False
-        self._flat = None
+        self._rows.tombstone(key)
         self._bump_epoch()
 
     def _compact_impl(self) -> None:
         """Physically drop tombstoned rows (DESIGN.md §7): live rows are
-        re-packed contiguously and dead vectors cease to exist host-side."""
-        live = np.flatnonzero(self._alive)
-        self._vecs = np.ascontiguousarray(self._vecs[live])
-        self._keys = [self._keys[i] for i in live]
-        self._alive = np.ones(live.size, bool)
-        self._key2row = {k: i for i, k in enumerate(self._keys)}
-        self._flat = None
-        self._live_rows = None
+        re-packed contiguously — host-side AND in every shard's block —
+        and dead vectors cease to exist."""
+        self._rows.compact()
         self._bump_epoch()
 
     # --------------------------------------------------------------- query
-    def _device(self) -> FlatIndex:
-        if self._flat is None:
-            live = np.flatnonzero(self._alive)
-            if live.size == 0:
-                raise ValueError("index is empty")
-            self._live_rows = live
-            self._flat = FlatIndex.build(self._vecs[live], metric=self.metric)
-        return self._flat
-
     def query_batch(self, queries, k: int = 10, **kw):
-        """One device dispatch for the whole [B, D] batch (exact top-k)."""
-        flat = self._device()
+        """ONE sharded device dispatch for the whole [B, D] batch: every
+        shard scans its own rows, per-shard top-k merges through the
+        hierarchical tree (exact top-k either way)."""
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
-        d, i = flat.query(q, min(k, flat.n))
-        d, i = np.asarray(d), np.asarray(i)
-        return _pad_results(
-            [[self._keys[int(self._live_rows[j])] for j in row] for row in i],
-            d, k)
+        d, rows = self._rows.topk(q, k)
+        keys = [[self._rows.key_of_row(int(r)) if r >= 0 else None
+                 for r in row] for row in rows]
+        return _pad_results(keys, d, k)
 
     def exact_query(self, query, k: int = 10):
         return self.query(query, k)        # flat IS the brute-force oracle
 
     # --------------------------------------------------------- persistence
+    # Canonical state only (DESIGN.md §8): shard placement is derived
+    # from the keys, so the SAME state_dict restores onto any shard count.
     def config_dict(self) -> dict:
-        return {"metric": self.metric, "dim": self.dim}
+        return {"metric": self.metric, "dim": self.dim,
+                "n_shards": self.n_shards}
 
     def state_dict(self) -> tuple[dict, dict]:
-        arrays = {"vectors": self._vecs, "alive": self._alive}
-        meta = {"keys": list(self._keys), "epoch": self._epoch}
+        arrays = {"vectors": self._rows.vectors, "alive": self._rows.alive}
+        meta = {"keys": list(self._rows.key_list), "epoch": self._epoch}
         return arrays, meta
 
     def restore_state(self, arrays: dict, meta: dict) -> None:
-        self._vecs = np.asarray(arrays["vectors"], np.float32)
-        self._alive = np.asarray(arrays["alive"], bool)
-        if self._vecs.shape[1]:
-            self.dim = int(self._vecs.shape[1])
-        self._keys = list(meta["keys"])
-        self._key2row = {k: i for i, k in enumerate(self._keys)
-                         if self._alive[i]}
+        self._rows.restore(np.asarray(arrays["vectors"], np.float32),
+                           list(meta["keys"]),
+                           np.asarray(arrays["alive"], bool))
+        if self._rows.dim:
+            self.dim = self._rows.dim
         self._epoch = int(meta["epoch"])
-        self._flat = None
-        self._live_rows = None
 
     def _row_count(self) -> int:
-        return len(self._keys)
+        return self._rows.row_count
 
     @property
     def size(self) -> int:
-        return len(self._key2row)
+        return self._rows.size
 
     def _contains(self, key: str) -> bool:
-        return key in self._key2row
+        return self._rows.contains(key)
 
     def keys(self) -> list[str]:
-        return [k for i, k in enumerate(self._keys) if self._alive[i]]
+        return self._rows.live_keys()
+
+    @property
+    def shard_count(self) -> int:
+        return self.n_shards
+
+    def shard_stats(self) -> list[dict]:
+        return self._rows.shard_stats()

@@ -63,6 +63,15 @@ class VectorIndex(abc.ABC):
     _epoch: int = 0            # mutation counter; instance attr on first bump
     _store = None              # IndexStore when attached (repro.store)
 
+    # -------------------------------------------------------------- shards
+    @property
+    def shard_count(self) -> int:
+        """Number of mesh shards the corpus is partitioned over
+        (DESIGN.md §8). 1 = the single-device layout. Backends that
+        accept ``n_shards`` override this; key->shard routing is
+        ``repro.core.sharded.shard_of_key`` everywhere."""
+        return 1
+
     # -------------------------------------------------------------- epoch
     @property
     def mutation_epoch(self) -> int:
@@ -118,11 +127,25 @@ class VectorIndex(abc.ABC):
         self._notify_store()
 
     def bulk_insert(self, keys: Sequence[str], values) -> None:
-        """Batched upsert (paper C3) — ONE WAL record for the whole batch."""
+        """Batched upsert (paper C3) — ONE WAL record for the whole batch.
+
+        A key repeated WITHIN the batch collapses last-wins BEFORE the
+        batch is logged or applied: an upsert sequence must leave exactly
+        one live row per key, and the backends' batch fast paths (HNSW
+        bulk-build adoption, the sharded block append) assume unique keys
+        — without the collapse they leave ghost rows that ``delete``
+        cannot retract."""
         values = np.asarray(values, np.float32)
         if len(keys) != len(values):
             raise ValueError("keys/values length mismatch")
         keys = list(keys)
+        if len(set(keys)) != len(keys):
+            last: dict = {}
+            for i, k in enumerate(keys):
+                last[k] = i
+            keep = sorted(last.values())
+            keys = [keys[i] for i in keep]
+            values = values[keep]
         self._log_mutation("bulk_insert", {"keys": keys}, {"vec": values})
         self._bulk_insert_impl(keys, values)
         self._notify_store()
@@ -303,15 +326,21 @@ def make_index(kind: str, store=None, **cfg) -> VectorIndex:
     """Create a VectorIndex backend by name.
 
     kind: "flat" | "ivf" | "hnsw" | "tiered". ``cfg`` passes through to the
-    backend constructor (common: metric, dim; hnsw/tiered: M,
+    backend constructor (common: metric, dim, n_shards; hnsw/tiered: M,
     ef_construction, ef_search; ivf: nlist, nprobe).
+
+    n_shards partitions the corpus over a device mesh (DESIGN.md §8):
+    CRUD routes to the owning shard by key hash, queries fan out to every
+    shard and merge through the hierarchical top-k tree. 1 (default) is
+    the single-device layout.
 
     store: optional durability home — an ``IndexStore`` or a directory
     path (DESIGN.md §7). If the store already holds an index, it is
     warm-restored (snapshot + WAL replay; ``cfg`` is ignored in favor of
-    the stored construction params, and a ``kind`` mismatch raises).
-    Otherwise a fresh index is created and attached, so every mutation
-    from here on is write-ahead logged.
+    the stored construction params — EXCEPT ``n_shards``, which overrides
+    so a snapshot can be resharded onto the current machine — and a
+    ``kind`` mismatch raises). Otherwise a fresh index is created and
+    attached, so every mutation from here on is write-ahead logged.
     """
     kind = kind.lower()
     if kind not in INDEX_KINDS:
@@ -322,7 +351,8 @@ def make_index(kind: str, store=None, **cfg) -> VectorIndex:
         if not isinstance(store, IndexStore):
             store = IndexStore(str(store))
         if store.has_state():
-            return store.load_index(expect_kind=kind)
+            return store.load_index(expect_kind=kind,
+                                    n_shards=cfg.get("n_shards"))
         idx = _construct(kind, cfg)
         store.attach(idx)
         return idx
@@ -340,5 +370,11 @@ def make_index_from_config(cfg, kind: str | None = None, store=None,
         params = dict(dim=cfg.dim, metric=cfg.metric,
                       nlist=getattr(cfg, "nlist", 64),
                       nprobe=getattr(cfg, "nprobe", 8))
+    # only forward n_shards when the config (or caller) actually sets it:
+    # an unconditional default of 1 would count as an explicit override in
+    # make_index and silently reshard a warm multi-shard store on restore
+    n_sh = getattr(cfg, "n_shards", None)
+    if n_sh is not None:
+        params["n_shards"] = n_sh
     params.update(overrides)
     return make_index(kind, store=store, **params)

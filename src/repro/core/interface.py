@@ -22,6 +22,21 @@ delete + reinsert under the same key. After the first query materialises a
 resident ``DeviceGraph`` (capacity-padded, fixed shapes), later mutations
 upload only the builder's dirty-row journal via ``apply_row_updates``
 instead of re-converting the whole graph (DESIGN.md §3).
+
+Sharded operation (``n_shards > 1``, DESIGN.md §8): a navigable
+small-world graph cannot be row-partitioned without breaking its search
+invariants, so the sharded HNSW is a FAISS/Milvus-style segment set —
+each shard owns an independent graph over its hash-routed keys. CRUD
+routes to the owning shard (same ``shard_of_key`` as every backend), ANN
+queries run the lock-step beam search on every shard's graph and merge
+by distance, and the exact/flat phase fans out through the sharded
+top-k substrate (``fanout_exact_topk``). Per-shard graphs are smaller
+(N/S rows -> cheaper expansions) and per-shard ANN results are merged
+candidates, so cross-shard-count parity holds for ``exact_query`` but
+``query_batch`` is parity-at-the-recall-level only — the per-shard
+graphs are different (valid) indexes. A global insertion-sequence table
+rides in ``state_dict`` so a snapshot can be RESHARDED on restore:
+rows replay into fresh per-shard builders in canonical order.
 """
 from __future__ import annotations
 
@@ -31,6 +46,7 @@ from repro.core import hnsw as jhnsw
 from repro.core import hnsw_build as build
 from repro.core.flat import FlatIndex
 from repro.core.index import VectorIndex
+from repro.core.sharded import fanout_exact_topk, shard_of_key
 
 
 class HNSW(VectorIndex):
@@ -38,7 +54,8 @@ class HNSW(VectorIndex):
 
     def __init__(self, distance_function: str = "cosine", *, M: int = 16,
                  ef_construction: int = 200, ef_search: int = 64,
-                 seed: int = 0, use_bulk_build: bool = False):
+                 seed: int = 0, use_bulk_build: bool = False,
+                 n_shards: int = 1):
         if distance_function not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown distanceFunction {distance_function!r}")
         self.metric = distance_function
@@ -47,6 +64,7 @@ class HNSW(VectorIndex):
         self.ef_search = ef_search
         self.seed = seed
         self.use_bulk_build = use_bulk_build
+        self.n_shards = int(n_shards)
         self._keys: list[str] = []                 # node id -> key
         self._key2id: dict[str, int] = {}          # live keys only
         self._deleted = np.zeros(0, bool)          # tombstones, capacity-sized
@@ -55,10 +73,44 @@ class HNSW(VectorIndex):
         self._graph: build.HNSWGraph | None = None
         self._device_graph: jhnsw.DeviceGraph | None = None
         self._deleted_dirty = False
+        # sharded segment set (n_shards > 1): child graphs + routing +
+        # the canonical insertion-sequence table (DESIGN.md §8)
+        self._shards: list["HNSW"] = []
+        self._key2shard: dict[str, int] = {}
+        self._seq: dict[str, int] = {}
+        self._next_seq = 0
+        if self.n_shards > 1:
+            self._shards = [
+                HNSW(distance_function=distance_function, M=M,
+                     ef_construction=ef_construction, ef_search=ef_search,
+                     seed=seed + j, use_bulk_build=False, n_shards=1)
+                for j in range(self.n_shards)]
+
+    # --------------------------------------------------- shard plumbing
+    @property
+    def shard_count(self) -> int:
+        return self.n_shards
+
+    def _mirror(self, child: "HNSW", fn, *args) -> None:
+        """Run a child-shard impl and mirror its epoch delta onto the
+        outer index, so the outer ``mutation_epoch`` advances exactly as
+        the 1-shard index would for the same op (cache-invalidation
+        parity across shard counts, DESIGN.md §6/§8)."""
+        before = child._epoch
+        fn(*args)
+        self._epoch += child._epoch - before
 
     # ------------------------------------------------------------ mutation
     def _insert_impl(self, key: str, value: np.ndarray) -> None:
         """Upsert one (key, vector); existing keys are updated in place."""
+        if self.n_shards > 1:
+            s = shard_of_key(key, self.n_shards)
+            self._mirror(self._shards[s], self._shards[s]._insert_impl,
+                         key, np.asarray(value, np.float32))
+            self._key2shard[key] = s
+            self._seq[key] = self._next_seq
+            self._next_seq += 1
+            return
         if key in self._key2id:
             self._delete_impl(key)
         v = np.asarray(value, np.float32)
@@ -73,6 +125,23 @@ class HNSW(VectorIndex):
         self._bump_epoch()
 
     def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
+        if self.n_shards > 1:
+            # routed inserts in global order: deterministic per-shard
+            # insertion sequences regardless of batch boundaries
+            if self.use_bulk_build and self._row_count() == 0:
+                # epoch parity with the 1-shard bulk-build path, which
+                # bumps ONCE for the whole first batch — the WAL replays
+                # one record per template call, so the epoch delta per
+                # record must match at every shard count or reshard-
+                # restore skips/faults on the records that follow
+                before = self._epoch
+                for k, v in zip(keys, values):
+                    self._insert_impl(k, v)
+                self._epoch = before + 1
+                return
+            for k, v in zip(keys, values):
+                self._insert_impl(k, v)
+            return
         if self.use_bulk_build and self._builder is None:
             g = build.bulk_build(
                 values, M=self.M, ef_construction=self.ef_construction,
@@ -98,6 +167,11 @@ class HNSW(VectorIndex):
     def _delete_impl(self, key: str) -> None:
         """Soft-delete: tombstone the row; it stays traversable but is
         never returned from query/exact_query again."""
+        if self.n_shards > 1:
+            s = self._key2shard.pop(key)           # KeyError if absent
+            self._seq.pop(key, None)
+            self._mirror(self._shards[s], self._shards[s]._delete_impl, key)
+            return
         node = self._key2id.pop(key)               # KeyError if absent
         self._ensure_tombstones()
         self._deleted[node] = True
@@ -110,6 +184,17 @@ class HNSW(VectorIndex):
         existing host-side — this is the expensive half of secure delete
         (tombstoning stays the cheap everyday path); the store layer
         rewrites the on-disk pages afterwards."""
+        if self.n_shards > 1:
+            # child epochs are internal; the OUTER delta must match what
+            # the 1-shard path produces for the same live set (one bump
+            # per reinserted row, or one bump when nothing is live) —
+            # naive mirroring would add +1 per EMPTY child and break
+            # epoch parity across shard counts
+            live_total = self.size
+            for child in self._shards:
+                child._compact_impl()
+            self._epoch += live_total if live_total else 1
+            return
         if self._builder is None:
             self._bump_epoch()
             return
@@ -165,18 +250,44 @@ class HNSW(VectorIndex):
         All B queries advance together through ``search_graph`` (DESIGN.md
         §2); the compiled program is cached per (B, k, ef) shape, which is
         why the serving layer coalesces into power-of-two B buckets.
+
+        Sharded: the same lock-step search runs on every shard's graph
+        (each N/S-row graph is a cheaper search) and the per-shard
+        candidates merge by distance (DESIGN.md §8).
         """
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
+        if self.n_shards > 1:
+            return self._query_batch_sharded(q, k, ef)
         ids, dists = jhnsw.search_graph(self._dg(), q, k=k,
                                         ef=ef or self.ef_search)
         ids, dists = np.asarray(ids), np.asarray(dists)
         keys = [[self._keys[i] if i >= 0 else None for i in row] for row in ids]
         return keys, dists
 
+    def _query_batch_sharded(self, q: np.ndarray, k: int, ef: int | None):
+        parts = [(child.query_batch(q, k=k, ef=ef))
+                 for child in self._shards if child._builder is not None]
+        if not parts:
+            raise ValueError("index is empty")
+        d_cat = np.concatenate([d for _, d in parts], axis=1)     # [B, C*k]
+        k_cat = [sum((pk[b] for pk, _ in parts), [])
+                 for b in range(q.shape[0])]
+        order = np.argsort(d_cat, axis=1, kind="stable")[:, :k]
+        dists = np.take_along_axis(d_cat, order, axis=1)
+        keys = [[k_cat[b][j] for j in order[b]] for b in range(q.shape[0])]
+        return keys, dists
+
     def exact_query(self, query, k: int = 10):
-        """Brute-force oracle over the same LIVE vectors -> (keys, dists)."""
+        """Brute-force oracle over the same LIVE vectors -> (keys, dists).
+
+        Sharded: the flat phase fans out — every shard scans its own live
+        rows with the fused kernel and the per-shard top-k merges through
+        the hierarchical tree (``fanout_exact_topk``, DESIGN.md §8), so
+        exact results are shard-count independent."""
+        if self.n_shards > 1:
+            return self._exact_query_sharded(query, k)
         if self._builder is None:
             raise ValueError("index is empty")
         self._ensure_tombstones()
@@ -197,27 +308,90 @@ class HNSW(VectorIndex):
             return keys[0], d[0]
         return keys, d
 
+    def _live_by_seq(self) -> list[tuple[int, str, int, int]]:
+        """Live rows in canonical (insertion-sequence) order:
+        [(seq, key, shard, node)]."""
+        items = []
+        for s, child in enumerate(self._shards):
+            for key, node in child._key2id.items():
+                items.append((self._seq[key], key, s, node))
+        items.sort()
+        return items
+
+    def _exact_query_sharded(self, query, k: int):
+        items = self._live_by_seq()
+        if not items:
+            raise ValueError("index is empty")
+        # canonical gid = rank in insertion order, grouped per shard in
+        # one O(live) pass
+        ranks: list[list[int]] = [[] for _ in range(self.n_shards)]
+        nodes: list[list[int]] = [[] for _ in range(self.n_shards)]
+        for rank, (_, _, s, node) in enumerate(items):
+            ranks[s].append(rank)
+            nodes[s].append(node)
+        groups = []
+        for s, child in enumerate(self._shards):
+            if ranks[s] and child._builder is not None:
+                vecs = np.asarray(child._builder.vectors[nodes[s]],
+                                  np.float32)
+            else:
+                vecs = np.zeros((0, np.asarray(query).shape[-1]), np.float32)
+            groups.append((vecs, np.asarray(ranks[s], np.int32)))
+        q = np.asarray(query, np.float32)
+        squeeze = q.ndim == 1
+        if squeeze:
+            q = q[None]
+        d, g = fanout_exact_topk(groups, q, min(k, len(items)),
+                                 metric=self.metric,
+                                 normalize=self.metric == "cosine")
+        keys = [[items[int(j)][1] if j >= 0 else None for j in row]
+                for row in g]
+        if squeeze:
+            return keys[0], d[0]
+        return keys, d
+
     @property
     def size(self) -> int:
+        if self.n_shards > 1:
+            return len(self._key2shard)
         return len(self._key2id)
 
     def _contains(self, key: str) -> bool:
+        if self.n_shards > 1:
+            return key in self._key2shard
         return key in self._key2id
 
     def _row_count(self) -> int:
+        if self.n_shards > 1:
+            return sum(c._row_count() for c in self._shards)
         return self._builder.n if self._builder is not None else 0
 
     def keys(self) -> list[str]:
+        if self.n_shards > 1:
+            return [k for _, k in sorted(
+                (self._seq[k], k) for k in self._key2shard)]
         n = self._builder.n if self._builder is not None else 0
         self._ensure_tombstones()
         return [self._keys[i] for i in range(n) if not self._deleted[i]]
+
+    def shard_stats(self) -> list[dict]:
+        # same convention at every shard count: slots = rows ever held
+        # (tombstones included), free = tombstoned, live = slots - free
+        if self.n_shards == 1:
+            return [{"shard": 0, "slots": self._row_count(),
+                     "free": self._row_count() - self.size,
+                     "live": self.size}]
+        return [{"shard": s, "slots": c._row_count(),
+                 "free": c._row_count() - c.size, "live": c.size}
+                for s, c in enumerate(self._shards)]
 
     # ------------------------------------------------------- persistence
     def config_dict(self) -> dict:
         return {"metric": self.metric, "M": self.M,
                 "ef_construction": self.ef_construction,
                 "ef_search": self.ef_search, "seed": self.seed,
-                "use_bulk_build": self.use_bulk_build}
+                "use_bulk_build": self.use_bulk_build,
+                "n_shards": self.n_shards}
 
     def state_dict(self) -> tuple[dict, dict]:
         """Full mutation-determined host state, CAPACITY-padded: the
@@ -230,7 +404,25 @@ class HNSW(VectorIndex):
         An index with no builder (nothing ever inserted, or compacted
         down to zero live rows) serializes as the empty state — a store
         must still be able to snapshot it: compacting away the LAST
-        document is precisely the secure-delete case."""
+        document is precisely the secure-delete case.
+
+        Sharded: one namespaced sub-state per shard plus the canonical
+        insertion-sequence table — which is what lets a snapshot restore
+        at a DIFFERENT shard count (rows replay into fresh builders in
+        canonical order; DESIGN.md §8)."""
+        if self.n_shards > 1:
+            arrays: dict = {}
+            shard_meta = []
+            for j, child in enumerate(self._shards):
+                a, m = child.state_dict()
+                for name, v in a.items():
+                    arrays[f"s{j}__{name}"] = v
+                shard_meta.append(m)
+            meta = {"n_shards": self.n_shards, "epoch": self._epoch,
+                    "shards": shard_meta,
+                    "seq": sorted(self._seq.items(), key=lambda kv: kv[1]),
+                    "next_seq": self._next_seq}
+            return arrays, meta
         if self._builder is None:
             arrays = {"vectors": np.zeros((0, 0), np.float32),
                       "levels": np.zeros(0, np.int32),
@@ -253,6 +445,23 @@ class HNSW(VectorIndex):
         return arrays, meta
 
     def restore_state(self, arrays: dict, meta: dict) -> None:
+        rec_shards = int(meta.get("n_shards", 1))
+        if rec_shards != self.n_shards:
+            # shard-count changed between snapshot and restore: replay the
+            # canonical row sequence into the new layout (DESIGN.md §8).
+            self._restore_resharded(arrays, meta, rec_shards)
+            return
+        if self.n_shards > 1:
+            for j, (child, m) in enumerate(zip(self._shards, meta["shards"])):
+                sub = {name[len(f"s{j}__"):]: v for name, v in arrays.items()
+                       if name.startswith(f"s{j}__")}
+                child.restore_state(sub, m)
+            self._key2shard = {k: s for s, c in enumerate(self._shards)
+                               for k in c._key2id}
+            self._seq = {k: int(v) for k, v in meta["seq"]}
+            self._next_seq = int(meta["next_seq"])
+            self._epoch = int(meta["epoch"])
+            return
         if meta["n"] == 0:                # empty state: no builder yet
             self._builder = None
             self._keys = []
@@ -284,6 +493,70 @@ class HNSW(VectorIndex):
         self._epoch = int(meta["epoch"])
         self._device_graph = None
         self._deleted_dirty = False
+
+    @staticmethod
+    def _canonical_rows(arrays: dict, meta: dict, rec_shards: int
+                        ) -> list[tuple[int, str, np.ndarray]]:
+        """Live rows of a recorded state in canonical insertion order:
+        [(seq, key, vector)] — the shard-layout-independent view."""
+        rows: list[tuple[int, str, np.ndarray]] = []
+        if rec_shards == 1:
+            n = int(meta["n"])
+            deleted = np.asarray(arrays["deleted"], bool)
+            vecs = np.asarray(arrays["vectors"], np.float32)
+            for node in range(n):
+                if not deleted[node]:
+                    rows.append((node, meta["keys"][node], vecs[node]))
+            return rows
+        seqmap = {k: int(v) for k, v in meta["seq"]}
+        for j, m in enumerate(meta["shards"]):
+            n = int(m["n"])
+            if n == 0:
+                continue
+            deleted = np.asarray(arrays[f"s{j}__deleted"], bool)
+            vecs = np.asarray(arrays[f"s{j}__vectors"], np.float32)
+            for node in range(n):
+                key = m["keys"][node]
+                if not deleted[node]:
+                    rows.append((seqmap[key], key, vecs[node]))
+        rows.sort(key=lambda r: r[0])
+        return rows
+
+    def _restore_resharded(self, arrays: dict, meta: dict,
+                           rec_shards: int) -> None:
+        """Adopt a snapshot recorded at a different shard count: a
+        deterministic REBUILD — live rows replay into fresh builders in
+        canonical order (tombstoned rows do not survive; fresh builders
+        draw fresh levels). Epoch and the sequence table are preserved so
+        epoch-keyed consumers and ``keys()`` order are unaffected."""
+        rows = self._canonical_rows(arrays, meta, rec_shards)
+        # reset to empty in the CURRENT layout
+        self._builder = None
+        self._keys = []
+        self._key2id = {}
+        self._deleted = np.zeros(0, bool)
+        self._device_graph = None
+        self._deleted_dirty = False
+        self._key2shard = {}
+        self._seq = {}
+        self._next_seq = 0
+        if self.n_shards > 1:
+            self._shards = [
+                HNSW(distance_function=self.metric, M=self.M,
+                     ef_construction=self.ef_construction,
+                     ef_search=self.ef_search, seed=self.seed + j,
+                     use_bulk_build=False, n_shards=1)
+                for j in range(self.n_shards)]
+        for _, key, vec in rows:
+            self._insert_impl(key, vec)
+        if self.n_shards > 1:
+            if rec_shards == 1:
+                self._seq = {key: seq for seq, key, _ in rows}
+                self._next_seq = int(meta["n"])
+            else:
+                self._seq = {k: int(v) for k, v in meta["seq"]}
+                self._next_seq = int(meta["next_seq"])
+        self._epoch = int(meta["epoch"])
 
     export_index = VectorIndex.export
     exportIndex = VectorIndex.export

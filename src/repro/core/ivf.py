@@ -7,6 +7,16 @@ rows go into fixed-capacity inverted lists (padded, -1). Search: score the
 query against centroids, take ``nprobe`` lists, gather their rows (one
 ``gather_distance`` wave per query batch), exact top-k over candidates.
 Everything is fixed-shape, so the whole query path jit-compiles once.
+
+Sharded operation (DESIGN.md §8): the coarse quantiser is GLOBAL (trained
+once over all live rows, replicated to every shard — it is canonical
+state), while the inverted lists and row payloads are PER-SHARD: each
+shard keeps lists over its own hash-routed rows, probes the same
+``nprobe`` clusters as every other shard, scores only its local
+candidates (``nprobe * cap / S`` distance work per device), and the
+per-shard top-k merges through the hierarchical tree. The union of the
+shards' probed candidates is exactly the 1-shard candidate set, which is
+why shard count does not change results.
 """
 from __future__ import annotations
 
@@ -16,9 +26,13 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
+from repro.core.sharded import (SHARD_AXIS, ShardedRows, hierarchical_topk,
+                                trim_merge_width)
 from repro.kernels import ops
 
 
@@ -122,8 +136,49 @@ def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
     return ids, dists
 
 
+# ---------------------------------------------------------------------------
+# sharded probe: per-shard lists, global centroids, hierarchical merge
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _ivf_fanout_fn(mesh, k: int, nprobe: int, metric: str):
+    """Compiled sharded IVF search. blocks [S,R,D] + lists [S,nlist,cap] +
+    gids [S,R] sharded over ``"shard"``; centroids [nlist,D] and queries
+    [B,D] replicated -> (dists [B,k], global row ids [B,k]) replicated.
+    Every shard probes the SAME clusters (the coarse score is replicated
+    arithmetic on replicated inputs), gathers only its local members, and
+    the per-shard top-k merges through the hierarchical tree."""
+    INF = jnp.float32(3e38)
+
+    def local(blk, lists, gid, cent, q):
+        blk, lists, gid = blk[0], lists[0], gid[0]
+        b = q.shape[0]
+        nlist, cap = lists.shape
+        r = blk.shape[0]
+        cd = ops.gather_distance(
+            cent, q, jnp.broadcast_to(jnp.arange(nlist), (b, nlist)),
+            metric=metric)
+        _, probe = jax.lax.top_k(-cd, nprobe)             # [B, nprobe]
+        cand = jnp.take(lists, probe, axis=0).reshape(b, nprobe * cap)
+        valid = cand >= 0
+        slots = jnp.clip(cand, 0, r - 1)
+        d = ops.gather_distance(blk, q, slots, metric=metric)
+        d = jnp.where(valid, d, INF)
+        g = jnp.take(gid, slots)
+        d, g = trim_merge_width(d, g, k, INF)
+        g = jnp.where(d >= INF, -1, g)
+        return hierarchical_topk(d, g, k, (SHARD_AXIS,), tie_break_ids=True)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(SHARD_AXIS, None, None),
+                             P(SHARD_AXIS, None, None), P(SHARD_AXIS, None),
+                             P(None, None), P(None, None)),
+                   out_specs=(P(None, None), P(None, None)),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
 class IVFVectorIndex(VectorIndex):
-    """Keyed mutable IVF backend (DESIGN.md §1/§4).
+    """Keyed mutable IVF backend (DESIGN.md §1/§4/§8).
 
     Centroids are trained once (k-means over the rows present at the first
     query); later inserts are assigned to their nearest existing centroid —
@@ -137,13 +192,18 @@ class IVFVectorIndex(VectorIndex):
     ``derived.centroids`` WAL record when a store is attached — WAL replay
     then reproduces the exact centroids, keeping a warm restore bit-for-bit
     equal to the live index (DESIGN.md §7).
+
+    With ``n_shards > 1`` storage and routing live in ``ShardedRows``;
+    the centroids stay global (canonical state, so ``state_dict`` is
+    identical at any shard count) while each shard packs inverted lists
+    over its own rows and searches them locally (DESIGN.md §8).
     """
 
     kind = "ivf"
 
     def __init__(self, *, metric: str = "cosine", dim: int | None = None,
                  nlist: int = 64, nprobe: int = 8, iters: int = 8,
-                 seed: int = 0):
+                 seed: int = 0, n_shards: int = 1):
         if metric not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown metric {metric!r}")
         self.metric = metric
@@ -152,60 +212,46 @@ class IVFVectorIndex(VectorIndex):
         self.nprobe = nprobe
         self.iters = iters
         self.seed = seed
-        self._vecs = np.zeros((0, dim or 0), np.float32)
-        self._keys: list[str] = []
-        self._key2row: dict[str, int] = {}
-        self._alive = np.zeros(0, bool)
+        self.n_shards = int(n_shards)
+        # rows are normalised at INSERT time for cosine (classic IVF add
+        # semantics), so the substrate packs them raw
+        self._rows = ShardedRows(n_shards=self.n_shards, metric=metric,
+                                 dim=dim, normalize_on_pack=False)
         self._centroids: np.ndarray | None = None   # trained lazily
-        self._idx: IVFIndex | None = None           # packed device index
-        self._live_rows: np.ndarray | None = None
+        self._idx: IVFIndex | None = None           # S==1 packed device index
+        self._live_rows: np.ndarray | None = None   # S==1 pack order
+        self._spack = None                          # S>1 sharded pack
 
     # ------------------------------------------------------------ mutation
-    def _append(self, key: str, v: np.ndarray):
-        if key in self._key2row:
-            self._alive[self._key2row[key]] = False
-        row = len(self._keys)
-        self._vecs = np.concatenate([self._vecs, v[None]])
-        self._keys.append(key)
-        self._alive = np.concatenate([self._alive, np.ones(1, bool)])
-        self._key2row[key] = row
+    def _invalidate(self) -> None:
         self._idx = None
-        self._bump_epoch()
+        self._live_rows = None
+        self._spack = None
 
     def _insert_impl(self, key: str, value: np.ndarray) -> None:
         v = np.asarray(value, np.float32).reshape(-1)
         if self.metric == "cosine":
             v = v / max(float(np.linalg.norm(v)), 1e-12)
-        if self.dim is None:
-            self.dim = v.shape[0]
-            self._vecs = np.zeros((0, self.dim), np.float32)
-        self._append(key, v)
+        self._rows.upsert(key, v)
+        self.dim = self._rows.dim
+        self._invalidate()
+        self._bump_epoch()
 
     def _bulk_insert_impl(self, keys: list[str], values: np.ndarray) -> None:
+        values = np.asarray(values, np.float32)
         if self.metric == "cosine":
             values = normalize_rows(values)
-        for key in keys:
-            if key in self._key2row:
-                self._alive[self._key2row[key]] = False
-        if self.dim is None:
-            self.dim = values.shape[1]
-            self._vecs = np.zeros((0, self.dim), np.float32)
-        base = len(self._keys)
-        self._vecs = np.concatenate([self._vecs, values])
-        self._keys.extend(keys)
-        self._alive = np.concatenate([self._alive, np.ones(len(keys), bool)])
-        for j, key in enumerate(keys):
-            self._key2row[key] = base + j
-        self._idx = None
+        self._rows.upsert_many(keys, values)
+        self.dim = self._rows.dim
+        self._invalidate()
         self._bump_epoch()
 
     def _update_impl(self, key: str, value: np.ndarray) -> None:
         self._insert_impl(key, value)
 
     def _delete_impl(self, key: str) -> None:
-        row = self._key2row.pop(key)
-        self._alive[row] = False
-        self._idx = None
+        self._rows.tombstone(key)
+        self._invalidate()
         self._bump_epoch()
 
     def _compact_impl(self) -> None:
@@ -213,26 +259,17 @@ class IVFVectorIndex(VectorIndex):
         dropped too — they are aggregates over data that may include the
         deleted rows (a singleton cluster's centroid IS the deleted
         vector) — and retrain over live rows at the next pack."""
-        live = np.flatnonzero(self._alive)
-        self._vecs = np.ascontiguousarray(self._vecs[live])
-        self._keys = [self._keys[i] for i in live]
-        self._alive = np.ones(live.size, bool)
-        self._key2row = {k: i for i, k in enumerate(self._keys)}
+        self._rows.compact()
         self._centroids = None
-        self._idx = None
-        self._live_rows = None
+        self._invalidate()
         self._bump_epoch()
 
-    # --------------------------------------------------------------- query
-    def _pack(self) -> IVFIndex:
-        """(Re)build the padded device lists over live rows only."""
-        if self._idx is not None:
-            return self._idx
-        live = np.flatnonzero(self._alive)
-        if live.size == 0:
-            raise ValueError("index is empty")
-        self._live_rows = live
-        v = self._vecs[live]
+    # ----------------------------------------------------------- training
+    def _coarse(self, live: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+        """-> (centroids, assignment over live rows, nlist). Shared by the
+        single-device and sharded packs so the quantiser (and therefore
+        the candidate sets) is identical at any shard count."""
+        v = self._rows.vectors[live]
         nlist = min(self.nlist, live.size)
         if self._centroids is None or self._centroids.shape[0] != nlist:
             cent, assign = kmeans(jnp.asarray(v), nlist, self.iters, self.seed)
@@ -247,10 +284,21 @@ class IVFVectorIndex(VectorIndex):
                                        epoch=self._epoch, meta={},
                                        arrays={"centroids": self._centroids})
         else:
-            cent = jnp.asarray(self._centroids)
             d = (np.sum(v * v, 1)[:, None] - 2 * v @ self._centroids.T
                  + np.sum(self._centroids ** 2, 1)[None, :])
             assign = np.argmin(d, 1)
+        return self._centroids, assign, nlist
+
+    # --------------------------------------------------------------- query
+    def _pack(self) -> IVFIndex:
+        """(Re)build the single-device padded lists over live rows only."""
+        if self._idx is not None:
+            return self._idx
+        live = np.flatnonzero(self._rows.alive)
+        if live.size == 0:
+            raise ValueError("index is empty")
+        self._live_rows = live
+        cent, assign, nlist = self._coarse(live)
         counts = np.bincount(assign, minlength=nlist)
         cap = max(int(counts.max()), 1)
         lists = np.full((nlist, cap), -1, np.int32)
@@ -258,78 +306,138 @@ class IVFVectorIndex(VectorIndex):
         for i, a in enumerate(assign):
             lists[a, cursor[a]] = i
             cursor[a] += 1
-        self._idx = IVFIndex(vectors=jnp.asarray(v), centroids=jnp.asarray(cent),
+        self._idx = IVFIndex(vectors=jnp.asarray(self._rows.vectors[live]),
+                             centroids=jnp.asarray(cent),
                              lists=jnp.asarray(lists), metric=self.metric)
         return self._idx
 
+    def _pack_sharded(self):
+        """(Re)build the per-shard inverted lists (DESIGN.md §8): every
+        live row's slot joins its cluster's list ON ITS OWNING SHARD."""
+        if self._spack is not None:
+            return self._spack
+        live = np.flatnonzero(self._rows.alive)
+        if live.size == 0:
+            raise ValueError("index is empty")
+        mesh, blocks, gids, _slack = self._rows.pack()
+        cent, assign, nlist = self._coarse(live)
+        s_lists: list[list[list[int]]] = [
+            [[] for _ in range(nlist)] for _ in range(self.n_shards)]
+        counts = np.bincount(assign, minlength=nlist)
+        cap_global = max(int(counts.max()), 1)    # 1-shard-equivalent cap:
+        cap = 1                                   # keeps the k clamp equal
+        for rank, row in enumerate(live):
+            s, slot = self._rows.placement_of_row(int(row))
+            bucket = s_lists[s][int(assign[rank])]
+            bucket.append(slot)
+            cap = max(cap, len(bucket))
+        lists = np.full((self.n_shards, nlist, cap), -1, np.int32)
+        for s in range(self.n_shards):
+            for c in range(nlist):
+                m = s_lists[s][c]
+                lists[s, c, :len(m)] = m
+        lj = jax.device_put(jnp.asarray(lists),
+                            NamedSharding(mesh, P(SHARD_AXIS, None, None)))
+        self._spack = (mesh, blocks, lj, gids, jnp.asarray(cent),
+                       nlist, cap_global, int(live.size))
+        return self._spack
+
     def query_batch(self, queries, k: int = 10, nprobe: int | None = None,
                     **kw):
-        """One fixed-shape probed search for the whole [B, D] batch.
+        """One fixed-shape probed search for the whole [B, D] batch —
+        single-dispatch sharded fan-out when ``n_shards > 1``.
 
         Extra search kwargs from other backends (e.g. hnsw's ``ef``) are
         accepted and ignored so the serving layer can pass one knob set
         through any backend."""
-        idx = self._pack()
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
-        ids, d = search_ivf(idx, q, k=min(k, idx.n),
-                            nprobe=nprobe or self.nprobe)
-        ids, d = np.asarray(ids), np.asarray(d)
+        if self.n_shards == 1:
+            idx = self._pack()
+            ids, d = search_ivf(idx, q, k=min(k, idx.n),
+                                nprobe=nprobe or self.nprobe)
+            ids, d = np.asarray(ids), np.asarray(d)
+            from repro.core.flat import _pad_results
+            return _pad_results(
+                [[self._rows.key_of_row(int(self._live_rows[j]))
+                  if j >= 0 else None for j in row] for row in ids], d, k)
+        mesh, blocks, lists, gids, cent, nlist, cap_global, n_live = \
+            self._pack_sharded()
+        qj = jnp.asarray(q)
+        if self.metric == "cosine":
+            qj = qj / jnp.maximum(
+                jnp.linalg.norm(qj, axis=-1, keepdims=True), 1e-12)
+        npr = min(nprobe or self.nprobe, nlist)
+        # same candidate-capacity clamp the 1-shard path applies
+        k_eff = min(min(k, n_live), npr * cap_global)
+        fn = _ivf_fanout_fn(mesh, k_eff, npr, self.metric)
+        d, g = fn(blocks, lists, gids, cent, qj)
+        d, g = np.asarray(d), np.asarray(g)
         from repro.core.flat import _pad_results
         return _pad_results(
-            [[self._keys[int(self._live_rows[j])] if j >= 0 else None
-              for j in row] for row in ids], d, k)
+            [[self._rows.key_of_row(int(r)) if r >= 0 else None
+              for r in row] for row in g], d, k)
 
     def exact_query(self, query, k: int = 10):
-        idx = self._pack()
         # nprobe = nlist probes every list -> exact over the live set
-        return self.query(query, k, nprobe=idx.centroids.shape[0])
+        if self.n_shards == 1:
+            idx = self._pack()
+            return self.query(query, k, nprobe=idx.centroids.shape[0])
+        nlist = self._pack_sharded()[5]
+        return self.query(query, k, nprobe=nlist)
 
     # --------------------------------------------------------- persistence
+    # Canonical state only (DESIGN.md §8): vectors + tombstones + keys +
+    # the GLOBAL centroids — per-shard lists are derived pack state, so
+    # the same state_dict restores onto any shard count.
     def config_dict(self) -> dict:
         return {"metric": self.metric, "dim": self.dim, "nlist": self.nlist,
                 "nprobe": self.nprobe, "iters": self.iters,
-                "seed": self.seed}
+                "seed": self.seed, "n_shards": self.n_shards}
 
     def state_dict(self) -> tuple[dict, dict]:
         cent = (self._centroids if self._centroids is not None
                 else np.zeros((0, self.dim or 0), np.float32))
-        arrays = {"vectors": self._vecs, "alive": self._alive,
+        arrays = {"vectors": self._rows.vectors, "alive": self._rows.alive,
                   "centroids": cent}
-        meta = {"keys": list(self._keys), "epoch": self._epoch,
+        meta = {"keys": list(self._rows.key_list), "epoch": self._epoch,
                 "has_centroids": self._centroids is not None}
         return arrays, meta
 
     def restore_state(self, arrays: dict, meta: dict) -> None:
-        self._vecs = np.asarray(arrays["vectors"], np.float32)
-        self._alive = np.asarray(arrays["alive"], bool)
-        if self._vecs.shape[1]:
-            self.dim = int(self._vecs.shape[1])
-        self._keys = list(meta["keys"])
-        self._key2row = {k: i for i, k in enumerate(self._keys)
-                         if self._alive[i]}
+        self._rows.restore(np.asarray(arrays["vectors"], np.float32),
+                           list(meta["keys"]),
+                           np.asarray(arrays["alive"], bool))
+        if self._rows.dim:
+            self.dim = self._rows.dim
         self._centroids = (np.asarray(arrays["centroids"], np.float32)
                            if meta["has_centroids"] else None)
         self._epoch = int(meta["epoch"])
-        self._idx = None
-        self._live_rows = None
+        self._invalidate()
 
     def _apply_derived(self, op: str, meta: dict, arrays: dict) -> None:
         if op != "derived.centroids":
             raise ValueError(f"IVFVectorIndex cannot replay {op!r}")
         self._centroids = np.asarray(arrays["centroids"], np.float32)
-        self._idx = None
+        self._invalidate()
 
     def _row_count(self) -> int:
-        return len(self._keys)
+        return self._rows.row_count
 
     @property
     def size(self) -> int:
-        return len(self._key2row)
+        return self._rows.size
 
     def _contains(self, key: str) -> bool:
-        return key in self._key2row
+        return self._rows.contains(key)
 
     def keys(self) -> list[str]:
-        return [k for i, k in enumerate(self._keys) if self._alive[i]]
+        return self._rows.live_keys()
+
+    @property
+    def shard_count(self) -> int:
+        return self.n_shards
+
+    def shard_stats(self) -> list[dict]:
+        return self._rows.shard_stats()

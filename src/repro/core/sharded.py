@@ -1,0 +1,471 @@
+"""Shard-aware row substrate: the mesh owns the corpus (DESIGN.md §8).
+
+Before this layer, every ``VectorIndex`` backend stored its rows and ran
+its search on a single device, while the pod-scale path
+(``core/distributed.sharded_flat_topk``) only worked on a static array
+with no CRUD. ``ShardedRows`` unifies the two: it is the keyed, mutable
+row store the flat and IVF backends are built on, and its search is the
+general fan-out/merge primitive the static helper now delegates to.
+
+Three layers of state:
+
+  * **canonical** (what persists; shard-count independent): append-only
+    host vectors ``[T, D]`` in insertion order, the row -> key table, and
+    the ``alive`` tombstone mask. ``state arrays`` serialize ONLY this —
+    a snapshot taken at 8 shards restores onto 1 (or vice versa) because
+    placement is derived, not stored (DESIGN.md §8, resharding).
+  * **placement** (derived): deterministic key->shard routing
+    (``shard_of_key``: stable blake2b, never Python ``hash``) plus
+    per-shard slot tables with free-slot reuse — a tombstoned row's slot
+    is handed to the next insert routed to the same shard, so block
+    shapes stay put under mutation churn (same motivation as the HNSW
+    capacity padding, DESIGN.md §3).
+  * **device** (lazy): row blocks ``[S, R, D]`` + global-id map
+    ``[S, R]`` placed with ``NamedSharding`` over the ``"shard"`` mesh
+    axis. Queries are replicated; each shard runs the fused
+    ``flat_topk`` kernel over its own block and the per-shard top-k
+    merges through the existing ``hierarchical_topk`` tree
+    (distributed/collectives.py) — one log-depth reduction.
+
+Single-shard indexes (``n_shards=1``, the default) bypass the mesh
+machinery entirely and run the exact same single-device code path as
+before this layer existed — bit-for-bit, which is what lets the whole
+pre-existing test suite double as the sharded path's parity oracle.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hnsw_build import normalize_rows
+from repro.distributed.collectives import hierarchical_topk
+from repro.kernels import ops
+
+INF = np.float32(3e38)
+SHARD_AXIS = "shard"
+# re-layout the slot tables when free (tombstoned/reusable) slots exceed
+# this fraction of block capacity: bounds the top-k slack (see pack())
+REPACK_FREE_FRACTION = 0.25
+
+
+def shard_of_key(key: str, n_shards: int) -> int:
+    """Deterministic key -> owning shard. Stable across processes and
+    restarts (blake2b, NOT Python ``hash``): the WAL replays mutations
+    through the same routing the live index used, and a resharded
+    restore re-derives placement from keys alone."""
+    if n_shards <= 1:
+        return 0
+    h = hashlib.blake2b(key.encode("utf-8"), digest_size=8).digest()
+    return int.from_bytes(h, "little") % n_shards
+
+
+def ensure_shard_devices(n_shards: int) -> None:
+    """Raise early (with the CPU-simulation recipe) when the process
+    cannot place ``n_shards`` shards."""
+    n_dev = len(jax.devices())
+    if n_shards > n_dev:
+        raise ValueError(
+            f"n_shards={n_shards} needs {n_shards} devices, found {n_dev}; "
+            "on CPU simulate with XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n_shards} (set before importing jax)")
+
+
+@functools.lru_cache(maxsize=8)
+def shard_mesh(n_shards: int) -> Mesh:
+    """1-D mesh over the first ``n_shards`` devices, axis ``"shard"``."""
+    ensure_shard_devices(n_shards)
+    return jax.make_mesh((n_shards,), (SHARD_AXIS,),
+                         devices=jax.devices()[:n_shards])
+
+
+# ---------------------------------------------------------------------------
+# fan-out search: per-shard fused top-k + hierarchical merge
+# ---------------------------------------------------------------------------
+def trim_merge_width(d: jax.Array, ids: jax.Array, k: int, inf
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Bring one shard's masked candidate set to exactly the k-wide merge
+    format: re-select k when over-fetched, pad with (inf, -1) when the
+    shard is short. Callers mask invalid candidates (free slots, DB
+    padding, list padding) to distance ``inf`` BEFORE calling — this is
+    the one place the local-result shape meets the merge contract, shared
+    by the flat fan-out, the IVF fan-out, and the static pod-scale path
+    (core/distributed.py)."""
+    kk = d.shape[1]
+    if kk > k:
+        neg, j = jax.lax.top_k(-d, k)
+        return -neg, jnp.take_along_axis(ids, j, axis=1)
+    if kk < k:
+        b = d.shape[0]
+        d = jnp.concatenate([d, jnp.full((b, k - kk), inf, d.dtype)], axis=1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((b, k - kk), -1, ids.dtype)], axis=1)
+    return d, ids
+
+
+@functools.lru_cache(maxsize=64)
+def _fanout_topk_fn(mesh: Mesh, k: int, slack: int, metric: str):
+    """Compiled sharded exact top-k.
+
+    blocks [S, R, D] + gids [S, R] (sharded over ``"shard"``), queries
+    [B, D] (replicated) -> (dists [B, k], global ids [B, k]) replicated.
+    Slots with gid < 0 (free slots / block padding) must not reach the
+    merge, but the fused ``flat_topk`` kernel cannot mask mid-kernel —
+    so each shard over-fetches ``k + slack`` candidates (slack = the
+    pack-time bound on dead slots per shard), masks by gid, and
+    re-selects k. Missing slots come back as (INF, -1).
+    """
+    def local(blk, gid, q):
+        blk, gid = blk[0], gid[0]
+        r = blk.shape[0]
+        kk = min(k + slack, r)
+        d, i = ops.flat_topk(blk, q, kk, metric=metric)
+        g = jnp.take(gid, i)
+        d = jnp.where(g >= 0, d, jnp.float32(INF))
+        d, g = trim_merge_width(d, g, k, jnp.float32(INF))
+        g = jnp.where(d >= jnp.float32(INF), -1, g)
+        return hierarchical_topk(d, g, k, (SHARD_AXIS,), tie_break_ids=True)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(SHARD_AXIS, None, None), P(SHARD_AXIS, None),
+                             P(None, None)),
+                   out_specs=(P(None, None), P(None, None)),
+                   check_rep=False)      # post-merge values ARE replicated
+    return jax.jit(fn)
+
+
+def _quantize_slack(slack: int) -> int:
+    """Round the dead-slot bound up to a power of two so the compiled
+    fan-out is reused across nearby pack states (same trick as the
+    serving layer's batch buckets, DESIGN.md §6)."""
+    if slack <= 0:
+        return 0
+    return 1 << (slack - 1).bit_length()
+
+
+def place_blocks(blocks: np.ndarray, gids: np.ndarray, mesh: Mesh):
+    """Upload one [S, R, D] block array + its [S, R] gid map, row blocks
+    resident on their owning shard's device."""
+    b = jax.device_put(jnp.asarray(blocks),
+                       NamedSharding(mesh, P(SHARD_AXIS, None, None)))
+    g = jax.device_put(jnp.asarray(gids),
+                       NamedSharding(mesh, P(SHARD_AXIS, None)))
+    return b, g
+
+
+def fanout_exact_topk(groups, queries, k: int, *, metric: str,
+                      normalize: bool = False
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """One-shot sharded exact search over explicit per-shard row groups.
+
+    groups: list of (vectors [n_s, D], gids [n_s]) — one entry per shard
+    (n_s may be 0). Used by backends whose rows do not live in a
+    ``ShardedRows`` (the HNSW/tiered exact phase searches the per-shard
+    graphs' live vectors). queries [B, D] -> (dists [B, k], gids [B, k]),
+    missing slots (INF, -1).
+    """
+    s = len(groups)
+    dim = queries.shape[1]
+    r = max(max((v.shape[0] for v, _ in groups), default=0), 1)
+    blocks = np.zeros((s, r, dim), np.float32)
+    gids = np.full((s, r), -1, np.int32)
+    slack = 0
+    for j, (v, g) in enumerate(groups):
+        if v.shape[0]:
+            blocks[j, :v.shape[0]] = normalize_rows(v) if normalize else v
+            gids[j, :v.shape[0]] = g
+        slack = max(slack, r - v.shape[0])
+    mesh = shard_mesh(s)
+    q = jnp.asarray(queries, jnp.float32)
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    fn = _fanout_topk_fn(mesh, k, _quantize_slack(slack), metric)
+    bl, gi = place_blocks(blocks, gids, mesh)
+    d, g = fn(bl, gi, q)
+    return np.asarray(d), np.asarray(g)
+
+
+# ---------------------------------------------------------------------------
+# the mutable substrate
+# ---------------------------------------------------------------------------
+class ShardedRows:
+    """Keyed mutable row storage partitioned across the mesh.
+
+    The flat and IVF backends delegate their storage, routing, and
+    bookkeeping here; HNSW/tiered use the routing + fan-out helpers.
+    All mutators are host-side and cheap; device blocks are packed
+    lazily on the first search after a mutation (the same laziness the
+    single-device backends always had).
+    """
+
+    def __init__(self, *, n_shards: int = 1, metric: str = "cosine",
+                 dim: int | None = None, normalize_on_pack: bool = False):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        self.metric = metric
+        self.dim = dim
+        # metric-appropriate normalization at pack time (flat semantics);
+        # IVF normalizes at insert instead and packs raw
+        self.normalize_on_pack = normalize_on_pack
+        # canonical
+        self._vecs = np.zeros((0, dim or 0), np.float32)
+        self._keys: list[str] = []
+        self._key2row: dict[str, int] = {}
+        self._alive = np.zeros(0, bool)
+        # placement
+        self._row_shard = np.zeros(0, np.int32)
+        self._row_slot = np.zeros(0, np.int32)
+        self._slots: list[list[int]] = [[] for _ in range(n_shards)]
+        self._free: list[list[int]] = [[] for _ in range(n_shards)]
+        # device (lazy)
+        self._device = None          # S>1: (mesh, blocks, gids, slack)
+        self._flat = None            # S==1: FlatIndex over live rows
+        self._live_rows: np.ndarray | None = None
+
+    # ------------------------------------------------------------ canonical
+    @property
+    def vectors(self) -> np.ndarray:
+        return self._vecs
+
+    @property
+    def alive(self) -> np.ndarray:
+        return self._alive
+
+    @property
+    def key_list(self) -> list[str]:
+        return self._keys
+
+    @property
+    def key2row(self) -> dict[str, int]:
+        return self._key2row
+
+    @property
+    def size(self) -> int:
+        return len(self._key2row)
+
+    @property
+    def row_count(self) -> int:
+        return len(self._keys)
+
+    def live_keys(self) -> list[str]:
+        return [k for i, k in enumerate(self._keys) if self._alive[i]]
+
+    def key_of_row(self, row: int) -> str:
+        return self._keys[row]
+
+    def placement_of_row(self, row: int) -> tuple[int, int]:
+        """-> (shard, slot) of a live row."""
+        return int(self._row_shard[row]), int(self._row_slot[row])
+
+    def shard_stats(self) -> list[dict]:
+        """Per-shard occupancy: live rows, free slots, block capacity."""
+        out = []
+        for s in range(self.n_shards):
+            free = len(self._free[s])
+            out.append({"shard": s, "slots": len(self._slots[s]),
+                        "free": free, "live": len(self._slots[s]) - free})
+        return out
+
+    # ------------------------------------------------------------ mutation
+    def _invalidate(self) -> None:
+        self._device = None
+        self._flat = None
+        self._live_rows = None
+
+    def _ensure_dim(self, d: int) -> None:
+        if self.dim is None:
+            self.dim = d
+            self._vecs = np.zeros((0, d), np.float32)
+
+    def _claim_slot(self, shard: int, row: int) -> int:
+        free = self._free[shard]
+        if free:
+            slot = free.pop()
+            self._slots[shard][slot] = row
+        else:
+            slot = len(self._slots[shard])
+            self._slots[shard].append(row)
+        return slot
+
+    def _release_row(self, row: int) -> None:
+        self._alive[row] = False
+        s, slot = int(self._row_shard[row]), int(self._row_slot[row])
+        self._slots[s][slot] = -1
+        self._free[s].append(slot)
+
+    def _append_row(self, key: str, vec: np.ndarray) -> int:
+        row = len(self._keys)
+        self._vecs = np.concatenate([self._vecs, vec[None]])
+        self._keys.append(key)
+        self._alive = np.concatenate([self._alive, np.ones(1, bool)])
+        self._key2row[key] = row
+        shard = shard_of_key(key, self.n_shards)
+        slot = self._claim_slot(shard, row)
+        self._row_shard = np.concatenate(
+            [self._row_shard, np.array([shard], np.int32)])
+        self._row_slot = np.concatenate(
+            [self._row_slot, np.array([slot], np.int32)])
+        return row
+
+    def upsert(self, key: str, vec: np.ndarray) -> None:
+        vec = np.asarray(vec, np.float32).reshape(-1)
+        self._ensure_dim(vec.shape[0])
+        old = self._key2row.pop(key, None)
+        if old is not None:
+            self._release_row(old)
+        self._append_row(key, vec)
+        self._invalidate()
+
+    def upsert_many(self, keys: list[str], vecs: np.ndarray) -> None:
+        vecs = np.asarray(vecs, np.float32)
+        self._ensure_dim(vecs.shape[1])
+        # pop as we release: a pre-existing key repeated WITHIN the batch
+        # must free its old slot exactly once (a double release would
+        # push the slot onto the free stack twice and hand it to two rows)
+        for key in keys:
+            old = self._key2row.pop(key, None)
+            if old is not None:
+                self._release_row(old)
+        base = len(self._keys)
+        n = len(keys)
+        self._vecs = np.concatenate([self._vecs, vecs])
+        self._keys.extend(keys)
+        self._alive = np.concatenate([self._alive, np.ones(n, bool)])
+        shards = np.zeros(n, np.int32)
+        slots = np.zeros(n, np.int32)
+        for j, key in enumerate(keys):
+            self._key2row[key] = base + j
+            shards[j] = shard_of_key(key, self.n_shards)
+            slots[j] = self._claim_slot(int(shards[j]), base + j)
+        self._row_shard = np.concatenate([self._row_shard, shards])
+        self._row_slot = np.concatenate([self._row_slot, slots])
+        self._invalidate()
+
+    def tombstone(self, key: str) -> None:
+        self._release_row(self._key2row.pop(key))
+        self._invalidate()
+
+    def contains(self, key: str) -> bool:
+        return key in self._key2row
+
+    def compact(self) -> None:
+        """Physically drop tombstoned rows: canonical arrays re-pack over
+        live rows and the per-shard slot tables are rebuilt dense — the
+        complement of the store layer's secure-delete page rewrite
+        (DESIGN.md §7): after this, a deleted vector's bytes exist in no
+        host array and in no shard's device block."""
+        live = np.flatnonzero(self._alive)
+        vecs = np.ascontiguousarray(self._vecs[live])
+        keys = [self._keys[i] for i in live]
+        self._reset_layout(vecs, keys, np.ones(live.size, bool))
+
+    def _reset_layout(self, vecs: np.ndarray, keys: list[str],
+                      alive: np.ndarray) -> None:
+        """Adopt canonical arrays and re-derive placement from scratch
+        (compaction, restore, resharding all land here)."""
+        self._vecs = np.asarray(vecs, np.float32)
+        if self._vecs.shape[1]:
+            self.dim = int(self._vecs.shape[1])
+        self._keys = list(keys)
+        self._alive = np.asarray(alive, bool).copy()
+        self._key2row = {k: i for i, k in enumerate(self._keys)
+                         if self._alive[i]}
+        n = len(self._keys)
+        self._row_shard = np.full(n, -1, np.int32)
+        self._row_slot = np.full(n, -1, np.int32)
+        self._slots = [[] for _ in range(self.n_shards)]
+        self._free = [[] for _ in range(self.n_shards)]
+        for row in range(n):
+            if not self._alive[row]:
+                continue                 # dead rows own no slot
+            shard = shard_of_key(self._keys[row], self.n_shards)
+            self._row_shard[row] = shard
+            self._row_slot[row] = self._claim_slot(shard, row)
+        self._invalidate()
+
+    def restore(self, vecs: np.ndarray, keys: list[str],
+                alive: np.ndarray) -> None:
+        """Inverse of the canonical accessors: placement is re-derived,
+        which is why a snapshot reshards freely (DESIGN.md §8)."""
+        self._reset_layout(vecs, keys, alive)
+
+    # --------------------------------------------------------------- pack
+    def _maybe_relayout(self) -> None:
+        total = sum(len(s) for s in self._slots)
+        free = sum(len(f) for f in self._free)
+        if total and free / total > REPACK_FREE_FRACTION:
+            # too many dead slots: re-derive a dense layout (slot churn
+            # is fine here — the device blocks are being rebuilt anyway)
+            self._reset_layout(self._vecs, self._keys, self._alive)
+
+    def pack(self):
+        """(Re)build the device placement over live rows.
+
+        S == 1 -> a plain ``FlatIndex`` (bit-for-bit the pre-shard path).
+        S > 1  -> (mesh, blocks [S,R,D], gids [S,R], slack).
+        """
+        live = np.flatnonzero(self._alive)
+        if live.size == 0:
+            raise ValueError("index is empty")
+        if self.n_shards == 1:
+            if self._flat is None:
+                from repro.core.flat import FlatIndex
+                self._live_rows = live
+                v = self._vecs[live]
+                self._flat = (FlatIndex.build(v, metric=self.metric)
+                              if self.normalize_on_pack else
+                              FlatIndex(vectors=jnp.asarray(v),
+                                        metric=self.metric))
+            return self._flat
+        if self._device is None:
+            self._maybe_relayout()
+            mesh = shard_mesh(self.n_shards)
+            r = max(max(len(s) for s in self._slots), 1)
+            blocks = np.zeros((self.n_shards, r, self.dim or 1), np.float32)
+            gids = np.full((self.n_shards, r), -1, np.int32)
+            slack = 0
+            for s in range(self.n_shards):
+                dead = r - (len(self._slots[s]) - len(self._free[s]))
+                slack = max(slack, dead)
+                table = np.asarray(self._slots[s], np.int64)
+                occ = np.flatnonzero(table >= 0)     # occupied slots only
+                if occ.size:
+                    blocks[s, occ] = self._vecs[table[occ]]
+                    gids[s, occ] = table[occ]
+            if self.normalize_on_pack and self.metric == "cosine":
+                # row-wise, so identical bits to normalizing each shard's
+                # rows separately; free slots stay zero (norm clamped)
+                blocks = normalize_rows(blocks)
+            bl, gi = place_blocks(blocks, gids, mesh)
+            self._device = (mesh, bl, gi, _quantize_slack(slack))
+        return self._device
+
+    # -------------------------------------------------------------- search
+    def topk(self, queries: np.ndarray, k: int
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact top-k over live rows -> (dists, global row ids).
+
+        S == 1 returns ``min(k, live)`` columns (exactly the historical
+        single-device behaviour — callers pad); S > 1 always returns k
+        columns with missing slots as (INF, -1).
+        """
+        q = np.asarray(queries, np.float32)
+        if self.n_shards == 1:
+            flat = self.pack()
+            d, i = flat.query(q, min(k, flat.n))
+            d, i = np.asarray(d), np.asarray(i)
+            return d, self._live_rows[i]
+        mesh, blocks, gids, slack = self.pack()
+        qj = jnp.asarray(q)
+        if self.metric == "cosine" and self.normalize_on_pack:
+            qj = qj / jnp.maximum(
+                jnp.linalg.norm(qj, axis=-1, keepdims=True), 1e-12)
+        fn = _fanout_topk_fn(mesh, k, slack, self.metric)
+        d, g = fn(blocks, gids, qj)
+        return np.asarray(d), np.asarray(g)

@@ -129,6 +129,13 @@ class TieredIndex(VectorIndex):
     mutation invalidates the fast-tier cache, so the next query re-warms it
     against the current graph. ``stats`` accumulates TierStats across
     queries between mutations.
+
+    Sharded operation (``n_shards > 1``, DESIGN.md §8): the inner HNSW is
+    the sharded segment set, so CRUD routes by key hash, the exact/flat
+    phase fans out through the sharded top-k substrate, and the tiered
+    accounting search runs per shard — each shard gets its OWN two-tier
+    store (its graph and payload are independent), results merge by
+    distance, and ``stats`` aggregates slow-tier traffic across shards.
     """
 
     kind = "tiered"
@@ -136,12 +143,15 @@ class TieredIndex(VectorIndex):
     def __init__(self, *, metric: str = "cosine", M: int = 16,
                  ef_construction: int = 200, ef_search: int = 64,
                  cache_rows: int = 1024, prefetch_p: int | None = None,
-                 seed: int = 0, use_bulk_build: bool = False):
+                 seed: int = 0, use_bulk_build: bool = False,
+                 n_shards: int = 1):
         from repro.core.interface import HNSW   # lazy: avoid import cycle
+        self.n_shards = int(n_shards)
         self.inner = HNSW(distance_function=metric, M=M,
                           ef_construction=ef_construction,
                           ef_search=ef_search, seed=seed,
-                          use_bulk_build=use_bulk_build)
+                          use_bulk_build=use_bulk_build,
+                          n_shards=self.n_shards)
         self.metric = metric
         self.ef_search = ef_search
         self.cache_rows = cache_rows
@@ -150,6 +160,8 @@ class TieredIndex(VectorIndex):
         # base class's ``_store``)
         self._tier_store: TieredVectorStore | None = None
         self._g: HNSWGraph | None = None
+        # sharded: one (graph, tier store, child) triple per shard
+        self._tier_shards: list | None = None
 
     # ------------------------------------------------------------ mutation
     # NB: mutations delegate to the INNER index's impl layer — the inner
@@ -159,6 +171,7 @@ class TieredIndex(VectorIndex):
     def _invalidate(self):
         self._tier_store = None
         self._g = None
+        self._tier_shards = None
         self._bump_epoch()
 
     def _insert_impl(self, key: str, value: np.ndarray) -> None:
@@ -194,29 +207,79 @@ class TieredIndex(VectorIndex):
                                                  prefetch_p=self.prefetch_p)
         return self._g, self._tier_store
 
+    def _tiers_sharded(self) -> list:
+        """Per-shard (graph, tier store, child-HNSW) triples: every shard's
+        payload is an independent slow tier with its own fast-tier cache
+        (DESIGN.md §8). Empty shards are skipped."""
+        if self._tier_shards is None:
+            out = []
+            for child in self.inner._shards:
+                if child._builder is None:
+                    continue
+                g = child._builder.graph()
+                out.append((g, TieredVectorStore(
+                    g.vectors, cache_rows=self.cache_rows,
+                    prefetch_p=self.prefetch_p), child))
+            if not out:
+                raise ValueError("index is empty")
+            self._tier_shards = out
+        return self._tier_shards
+
     @property
     def stats(self) -> TierStats:
-        return self._tiers()[1].stats
+        if self.n_shards == 1:
+            return self._tiers()[1].stats
+        total = TierStats()
+        for _, store, _ in self._tiers_sharded():
+            s = store.stats
+            total.transactions += s.transactions
+            total.rows_fetched += s.rows_fetched
+            total.hits += s.hits
+            total.misses += s.misses
+            total.evictions += s.evictions
+        return total
 
     def query_batch(self, queries, k: int = 10, ef: int | None = None):
         """Batched search through the two-tier store. The host-side beam is
         the *accounting model* (it counts slow-tier transactions), so the
         batch runs query-at-a-time — but all B queries share one warmed
         fast-tier cache, which is exactly the amortisation the model is
-        meant to expose."""
-        g, store = self._tiers()
-        self.inner._ensure_tombstones()
-        deleted = self.inner._deleted
+        meant to expose. Sharded: each shard's beam runs over its own
+        (smaller) graph + tier store; candidates merge by distance."""
         ef = max(ef or self.ef_search, k)
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
+        if self.n_shards > 1:
+            return self._query_batch_sharded(q, k, ef)
+        g, store = self._tiers()
+        self.inner._ensure_tombstones()
+        deleted = self.inner._deleted
         out_keys, out_d = [], []
         for qv in q:
             ids, dists = _tiered_beam_search(g, deleted, store, qv, k, ef)
             out_keys.append([self.inner._keys[i] if i >= 0 else None
                              for i in ids])
             out_d.append(dists)
+        return out_keys, np.asarray(out_d, np.float32)
+
+    def _query_batch_sharded(self, q: np.ndarray, k: int, ef: int):
+        tiers = self._tiers_sharded()
+        out_keys, out_d = [], []
+        for qv in q:
+            cand: list[tuple[float, str]] = []
+            for g, store, child in tiers:
+                child._ensure_tombstones()
+                ids, dists = _tiered_beam_search(g, child._deleted, store,
+                                                 qv, k, ef)
+                cand.extend((d, child._keys[i])
+                            for d, i in zip(dists, ids) if i >= 0)
+            cand.sort(key=lambda c: c[0])
+            cand = cand[:k]
+            out_keys.append([key for _, key in cand]
+                            + [None] * (k - len(cand)))
+            out_d.append([d for d, _ in cand]
+                         + [float(np.float32(3e38))] * (k - len(cand)))
         return out_keys, np.asarray(out_d, np.float32)
 
     def exact_query(self, query, k: int = 10):
@@ -230,7 +293,8 @@ class TieredIndex(VectorIndex):
                 "cache_rows": self.cache_rows,
                 "prefetch_p": self.prefetch_p,
                 "seed": self.inner.seed,
-                "use_bulk_build": self.inner.use_bulk_build}
+                "use_bulk_build": self.inner.use_bulk_build,
+                "n_shards": self.n_shards}
 
     def state_dict(self) -> tuple[dict, dict]:
         """The durable state IS the inner HNSW's (graph + tombstones +
@@ -246,6 +310,7 @@ class TieredIndex(VectorIndex):
         self._epoch = int(meta["outer_epoch"])
         self._tier_store = None
         self._g = None
+        self._tier_shards = None
 
     def _row_count(self) -> int:
         return self.inner._row_count()
@@ -259,6 +324,13 @@ class TieredIndex(VectorIndex):
 
     def keys(self) -> list[str]:
         return self.inner.keys()
+
+    @property
+    def shard_count(self) -> int:
+        return self.n_shards
+
+    def shard_stats(self) -> list[dict]:
+        return self.inner.shard_stats()
 
 
 def _tiered_beam_search(g: HNSWGraph, deleted: np.ndarray,

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 
 def topk_merge_axis(dists: jax.Array, ids: jax.Array, k: int,
-                    axis_name: str, wire_bf16: bool = False
+                    axis_name: str, wire_bf16: bool = False,
+                    tie_break_ids: bool = False
                     ) -> tuple[jax.Array, jax.Array]:
     """Merge per-shard top-k over one mesh axis (log-depth building block).
 
@@ -16,6 +17,14 @@ def topk_merge_axis(dists: jax.Array, ids: jax.Array, k: int,
     Wire cost: k * axis_size values instead of the full candidate set.
     ``wire_bf16`` halves the distance payload on the wire (ordering is
     preserved to bf16 resolution; ids stay exact).
+
+    ``tie_break_ids`` resolves equal distances toward the smallest id via
+    a two-key sort — the same order a single-device ``top_k`` over the
+    id-sorted candidate set produces, which is what keeps the sharded
+    index's merge bit-compatible with the 1-shard path (DESIGN.md §8).
+    (Ties that straddle a shard's LOCAL top-k boundary are still cut by
+    shard-local order; with real-valued distances that requires > k
+    exactly-tied duplicate rows in one shard.)
     """
     if wire_bf16 and dists.dtype == jnp.bfloat16:
         # ship raw u16 bits: a bitcast cannot be commuted above the gather
@@ -30,13 +39,18 @@ def topk_merge_axis(dists: jax.Array, ids: jax.Array, k: int,
     b = dists.shape[0]
     d_flat = jnp.transpose(d_all, (1, 0, 2)).reshape(b, s * k)
     i_flat = jnp.transpose(i_all, (1, 0, 2)).reshape(b, s * k)
+    if tie_break_ids:
+        sd, si = jax.lax.sort((d_flat, i_flat), num_keys=2)
+        return sd[:, :k], si[:, :k]
     neg, j = jax.lax.top_k(-d_flat, k)
     return -neg, jnp.take_along_axis(i_flat, j, axis=1)
 
 
 def hierarchical_topk(dists: jax.Array, ids: jax.Array, k: int,
                       axis_names: tuple[str, ...],
-                      wire_bf16: bool = False) -> tuple[jax.Array, jax.Array]:
+                      wire_bf16: bool = False,
+                      tie_break_ids: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
     """Merge local top-k across every mesh axis, innermost (fastest) first:
     'model' -> 'data' -> 'pod' gives log-depth tree reduction whose traffic
     per hop is k*axis_size rather than sum of shard sizes. ``wire_bf16``
@@ -47,7 +61,8 @@ def hierarchical_topk(dists: jax.Array, ids: jax.Array, k: int,
     if wire_bf16:
         dists = dists.astype(jnp.bfloat16)
     for ax in axis_names:
-        dists, ids = topk_merge_axis(dists, ids, k, ax, wire_bf16)
+        dists, ids = topk_merge_axis(dists, ids, k, ax, wire_bf16,
+                                     tie_break_ids)
     return dists.astype(out_dtype), ids
 
 

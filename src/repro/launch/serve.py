@@ -43,6 +43,13 @@ def main():
                     help="RetrievalEngine bucket cap (power of two)")
     ap.add_argument("--retrieval-cache", type=int, default=1024,
                     help="RetrievalEngine LRU entries (0 disables)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="partition the index over N mesh shards "
+                         "(DESIGN.md §8): CRUD routes by key hash, "
+                         "queries fan out + merge. Default: single "
+                         "device (or the stored shard count on a warm "
+                         "restore). CPU simulation needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--store-dir", default=None,
                     help="durable IndexStore directory (DESIGN.md §7): "
                          "restarts restore the index warm — snapshot + "
@@ -66,7 +73,11 @@ def main():
                                snapshot_every=args.snapshot_every or None)
         rag = RAGPipeline(index_kind=args.index, index_store=store,
                           retrieval_batch=args.retrieval_batch,
-                          retrieval_cache=args.retrieval_cache)
+                          retrieval_cache=args.retrieval_cache,
+                          index_shards=args.shards)
+        if rag.index.shard_count > 1:
+            logger.info(f"index sharded over {rag.index.shard_count} "
+                        f"devices (key-hash routing + fan-out search)")
         if rag.index.size:
             # warm restore: embeddings came back from the store (epoch
             # included — the retrieval cache keys on it); only the text

@@ -50,14 +50,20 @@ class RAGPipeline:
                  template: str = DEFAULT_TEMPLATE,
                  generate_fn: Callable[[str], str] | None = None,
                  M: int = 16, ef_construction: int = 100,
-                 retrieval_batch: int = 128, retrieval_cache: int = 1024):
+                 retrieval_batch: int = 128, retrieval_cache: int = 1024,
+                 index_shards: int | None = None):
         # index_store: an ``IndexStore`` (or path) making the index durable
         # (DESIGN.md §7) — a warm store restores the previous session's
         # index, mutation_epoch included, instead of building a fresh one.
+        # index_shards: partition the index over the device mesh
+        # (DESIGN.md §8); None keeps the backend default (or, on a warm
+        # restore, the stored shard count).
         self.encoder = encoder or HashingEncoder()
+        shard_cfg = {} if index_shards is None else {"n_shards": index_shards}
         self.index = index if index is not None else make_index(
             index_kind, store=index_store, metric="cosine",
-            dim=self.encoder.dim, M=M, ef_construction=ef_construction)
+            dim=self.encoder.dim, M=M, ef_construction=ef_construction,
+            **shard_cfg)
         self.store = store or DocumentStore()
         self.template = template
         self.generate_fn = generate_fn

@@ -13,7 +13,15 @@ one compiled dispatch. ``RetrievalEngine`` closes that gap:
     observed batch size (the same trick as ``apply_row_updates``' dirty-row
     padding, DESIGN.md §3);
   * each group runs as ONE ``index.query_batch`` dispatch through any
-    ``VectorIndex`` backend, and results fan back out to the callers;
+    ``VectorIndex`` backend, and results fan back out to the callers. On
+    a sharded index (DESIGN.md §8) that single dispatch IS the mesh-wide
+    fan-out — every shard scans its rows and the per-shard top-k merges
+    on-device — so the engine stays one-dispatch-per-group at any shard
+    count, and shard-ROUTED mutations keep cache invalidation correct:
+    a mutation that touches only one shard still bumps the index's
+    GLOBAL ``mutation_epoch`` (sharded backends mirror every per-shard
+    epoch delta onto the outer index), so the whole LRU drops exactly
+    as it would on a single device;
   * an **LRU result cache** keyed on (query-vector hash, k, ef) serves
     repeats without touching the device. The cache is validated against the
     index's ``mutation_epoch``: every insert/update/delete bumps the epoch
@@ -113,6 +121,7 @@ class RetrievalEngine:
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, got {max_batch}")
         self.index = index
+        self.shards = getattr(index, "shard_count", 1)
         self.max_batch = max_batch
         self.cache_size = cache_size
         self.queue: collections.deque[RetrievalRequest] = collections.deque()

@@ -173,14 +173,26 @@ class IndexStore:
                               ignore_errors=True)
 
     # ----------------------------------------------------------- restore
-    def load_index(self, expect_kind: str | None = None):
+    def load_index(self, expect_kind: str | None = None,
+                   n_shards: int | None = None):
         """Warm restore: latest snapshot + WAL replay, then attach.
 
         The result is bit-for-bit equal to the index that was live when
         the last WAL record landed — including ``mutation_epoch``, so
         epoch-keyed consumers (the RetrievalEngine LRU, DESIGN.md §6)
-        keep their invalidation semantics across restarts."""
+        keep their invalidation semantics across restarts.
+
+        ``n_shards`` overrides the stored shard count — RESHARDING on
+        restore (DESIGN.md §8): backends serialize canonical (placement-
+        independent) state, so a snapshot taken at 8 shards restores onto
+        1 and vice versa. Without an override, a stored shard count that
+        exceeds this process's device count is clamped (with a log line)
+        instead of bricking the store — shard count is an execution
+        resource, not data."""
+        import jax
+
         from repro.core.index import make_index
+        from repro.utils import logger
 
         cfgp = self._config_path()
         if not os.path.exists(cfgp):
@@ -193,7 +205,16 @@ class IndexStore:
             raise ValueError(
                 f"store at {self.root} holds a {cfg['kind']!r} index, "
                 f"not {expect_kind!r}")
-        idx = make_index(cfg["kind"], **cfg["params"])
+        params = dict(cfg["params"])
+        if n_shards is not None:
+            params["n_shards"] = int(n_shards)
+        elif params.get("n_shards", 1) > len(jax.devices()):
+            logger.info(
+                f"store at {self.root}: stored n_shards="
+                f"{params['n_shards']} exceeds {len(jax.devices())} "
+                "available device(s); resharding on restore")
+            params["n_shards"] = len(jax.devices())
+        idx = make_index(cfg["kind"], **params)
 
         snaps = self.snapshots()
         if snaps:

@@ -40,6 +40,39 @@ def test_sharded_flat_topk_exact():
     assert "OK" in out
 
 
+def test_sharded_flat_topk_awkward_n():
+    """Regression: N not a multiple of the shard count used to silently
+    drop the trailing ``N mod S`` rows (``n // n_shards`` truncation).
+    The DB is now padded with sentinel rows whose ids are masked out of
+    the merge — results must be exact at awkward N, including when the
+    true top-k lives in the truncated tail and when N < n_shards."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import sharded_flat_topk
+        from repro.kernels import ref
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        # 637 = 8 * 79 + 5: five tail rows used to vanish from the search
+        db = jax.random.normal(jax.random.PRNGKey(0), (637, 16))
+        q = db[-3:] + 0.001          # true neighbors ARE the tail rows
+        d, i = jax.jit(lambda a, b: sharded_flat_topk(mesh, a, b, 10,
+                                                      metric="l2"))(db, q)
+        de, ie = ref.distance_topk_ref(db, q, 10, metric="l2")
+        assert (np.sort(np.asarray(i)) == np.sort(np.asarray(ie))).all(), \\
+            "tail rows still dropped"
+        assert np.allclose(np.sort(np.asarray(d)), np.sort(np.asarray(de)),
+                           atol=1e-4)
+        assert np.asarray(i)[0, 0] == 634       # the tail row itself wins
+        # degenerate: fewer rows than shards (every shard padded)
+        db2 = jax.random.normal(jax.random.PRNGKey(2), (5, 16))
+        d2, i2 = jax.jit(lambda a, b: sharded_flat_topk(
+            mesh, a, b, 3, metric="l2"))(db2, db2[:2])
+        de2, ie2 = ref.distance_topk_ref(db2, db2[:2], 3, metric="l2")
+        assert (np.sort(np.asarray(i2)) == np.sort(np.asarray(ie2))).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_sharded_topk_bf16_wire_recall():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np

@@ -125,6 +125,42 @@ def test_conformance_k_exceeding_live_pads_with_none(kind):
     assert keys[0] == "d0" and keys[4:] == [None] * 6
 
 
+@pytest.mark.parametrize("kind", KINDS)
+def test_conformance_bulk_insert_duplicate_key_collapses(kind):
+    """A key repeated within one bulk_insert batch is an upsert: exactly
+    one live row survives (last value wins) and delete retracts it fully
+    — no ghost row that a query can still surface."""
+    data = make_corpus(12, 16, seed=11)
+    idx = make_index(kind, dim=16, metric="cosine", M=4, ef_construction=20)
+    idx.bulk_insert(["a", "a"] + [f"d{i}" for i in range(10)],
+                    np.concatenate([data[:2], data[2:]]))
+    assert idx.size == 11
+    assert idx.keys().count("a") == 1
+    got, d = idx.query(data[1], k=1)       # the LAST duplicate's vector won
+    assert got[0] == "a" and float(d[0]) < 1e-4
+    idx.delete("a")
+    keys, _ = idx.query(data[0], k=idx.size)
+    assert "a" not in keys                 # the first dup left no ghost
+    keys, _ = idx.query(data[1], k=idx.size)
+    assert "a" not in keys
+
+
+def test_hnsw_bulk_build_duplicate_key_collapses():
+    """Same contract through the bulk-build adoption fast path."""
+    from repro.core.interface import HNSW
+    data = make_corpus(12, 16, seed=12)
+    idx = HNSW(distance_function="cosine", M=4, ef_construction=20,
+               use_bulk_build=True)
+    idx.bulk_insert(["a", "a"] + [f"d{i}" for i in range(10)],
+                    np.concatenate([data[:2], data[2:]]))
+    assert idx.size == 11
+    idx.delete("a")
+    keys, _ = idx.query(data[0], k=idx.size)
+    assert "a" not in keys
+    keys, _ = idx.query(data[1], k=idx.size)
+    assert "a" not in keys
+
+
 def test_make_index_rejects_unknown_kind():
     with pytest.raises(ValueError, match="unknown index kind"):
         make_index("annoy")
@@ -196,6 +232,88 @@ def test_hnsw_deleted_entry_point_still_searchable():
     idx.delete(entry_key)                    # tombstone the entry point
     keys, _ = idx.query(data[60], k=3)
     assert entry_key not in keys and keys[0] is not None
+
+
+# ---------------------------------------------------------------------------
+# shard substrate (DESIGN.md §8) — host-side pieces testable on one device;
+# the mesh fan-out / cross-shard parity suite is tests/test_sharded.py
+# ---------------------------------------------------------------------------
+def test_shard_routing_deterministic_and_balanced():
+    from repro.core.sharded import shard_of_key
+    keys = [f"doc-{i}" for i in range(4000)]
+    a = [shard_of_key(k, 8) for k in keys]
+    assert a == [shard_of_key(k, 8) for k in keys]   # stable (not hash())
+    counts = np.bincount(a, minlength=8)
+    assert counts.sum() == 4000 and counts.max() < 700  # roughly balanced
+    assert all(shard_of_key(k, 1) == 0 for k in keys[:10])
+
+
+def test_sharded_rows_free_slot_bookkeeping():
+    """Tombstoned slots are reused by later inserts routed to the same
+    shard; compaction re-derives a dense layout."""
+    from repro.core.sharded import ShardedRows, shard_of_key
+    rows = ShardedRows(n_shards=4, metric="cosine", dim=8)
+    data = np.random.default_rng(0).normal(size=(40, 8)).astype(np.float32)
+    for i in range(40):
+        rows.upsert(f"k{i}", data[i])
+    assert rows.size == 40
+    victim = "k7"
+    s7, slot7 = rows.placement_of_row(rows.key2row[victim])
+    rows.tombstone(victim)
+    # next insert routed to the same shard claims the freed slot
+    probe = next(f"n{j}" for j in range(1000)
+                 if shard_of_key(f"n{j}", 4) == s7)
+    rows.upsert(probe, data[0])
+    assert rows.placement_of_row(rows.key2row[probe]) == (s7, slot7)
+    stats = rows.shard_stats()
+    assert sum(st["live"] for st in stats) == 40
+    # upsert of an existing key frees its old slot too
+    rows.upsert(probe, data[1])
+    assert rows.size == 40
+    rows.compact()
+    assert rows.row_count == 40 and rows.size == 40
+    assert all(st["free"] == 0 for st in rows.shard_stats())
+    assert victim not in rows.key2row
+    # regression: a pre-existing key repeated WITHIN one batch must free
+    # its old slot exactly once — a double release would hand the same
+    # slot to two rows and desync the slot tables from the alive mask
+    rows.upsert_many(["k3", "k3"], data[:2])
+    occupied = {(s, slot) for s in range(4)
+                for slot, r in enumerate(rows._slots[s]) if r >= 0}
+    assert len(occupied) == int(rows.alive.sum())
+    for s in range(4):
+        st = rows.shard_stats()[s]
+        assert st["slots"] - st["free"] == st["live"]
+
+
+def test_sharded_without_devices_raises_helpfully():
+    """n_shards beyond the process's device count: mutations (host-side)
+    work, the first device search raises with the XLA_FLAGS recipe."""
+    idx = make_index("flat", dim=8, metric="cosine", n_shards=4)
+    idx.bulk_insert(["a", "b"], np.eye(8, dtype=np.float32)[:2])
+    assert idx.size == 2 and idx.shard_count == 4
+    import jax
+    if len(jax.devices()) >= 4:
+        pytest.skip("process has enough devices to place 4 shards")
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        idx.query(np.ones(8, np.float32), k=1)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_single_shard_config_roundtrips(kind):
+    """n_shards=1 (default) is the historical layout: shard_count reports
+    it, config round-trips through export/load."""
+    idx, data = build(kind, n=40)
+    assert idx.shard_count == 1
+    assert idx.config_dict().get("n_shards", 1) == 1
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "idx.npz")
+        idx.export(p)
+        idx2 = type(idx).load(p)
+        assert idx2.shard_count == 1
+        k1, _ = idx.query(data[3], k=3)
+        k2, _ = idx2.query(data[3], k=3)
+        assert k1 == k2
 
 
 def test_tiered_query_counts_slow_tier_traffic():
