@@ -1,0 +1,91 @@
+"""Storage-codec benchmarks (DESIGN.md §9): what do bf16/int8 rows buy,
+and what do they cost?
+
+MeMemo's browser setting makes BYTES the binding constraint — a 1M x
+768-d fp32 corpus is ~3 GB of device blocks and ~3 GB of snapshot before
+FLOPs ever matter. Rows here quantify the codec layer on the flat
+backend (exact search, so recall isolates pure quantization error):
+
+  * ``memory_<dtype>_n<N>`` — query latency (us/query at B=32) with
+    derived columns:
+      - ``dev_B_per_vec``  device bytes per vector (packed blocks +
+                           scale table), ``dev_save`` vs fp32;
+      - ``snap_B_per_vec`` snapshot bytes per vector on disk (encoded
+                           pages + scales + manifest), ``snap_save``;
+      - ``recall10``       recall@10 vs the fp32 index over the same
+                           corpus (fp32 row = 1.0 by construction).
+
+Smoke mode (REPRO_BENCH_SMOKE=1) shrinks N to a seconds-scale canary —
+CI asserts these rows exist in BENCH_smoke.json, so a codec that stops
+encoding (or a snapshot that silently falls back to fp32 pages) fails
+the smoke job on byte counts, not just on tests.
+"""
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+DTYPES = ("fp32", "bf16", "int8")
+
+
+def _dir_bytes(root: str) -> int:
+    total = 0
+    for dp, _, fns in os.walk(root):
+        for fn in fns:
+            total += os.path.getsize(os.path.join(dp, fn))
+    return total
+
+
+def _recall(found, truth) -> float:
+    hits = sum(len(set(a) & set(b)) for a, b in zip(found, truth))
+    return hits / max(sum(len(b) for b in truth), 1)
+
+
+def run(rows: list):
+    from repro.core import make_index
+    from repro.store import IndexStore
+
+    sizes = [2_000] if SMOKE else [20_000, 100_000]
+    dim = 64 if SMOKE else 128
+    b, k, iters = 32, 10, (3 if SMOKE else 10)
+    rng = np.random.default_rng(0)
+    queries = rng.normal(size=(b, dim)).astype(np.float32)
+
+    for n in sizes:
+        data = rng.normal(size=(n, dim)).astype(np.float32)
+        keys = [f"d{i}" for i in range(n)]
+        baseline = {}
+        truth = None
+        for dtype in DTYPES:
+            root = tempfile.mkdtemp(prefix=f"bench_memory_{dtype}_")
+            try:
+                idx = make_index("flat", dim=dim, metric="cosine",
+                                 dtype=dtype,
+                                 store=IndexStore(os.path.join(root, "s")))
+                idx.bulk_insert(keys, data)
+                idx.query_batch(queries, k)          # pack + compile
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    found, _ = idx.query_batch(queries, k)
+                dt = (time.perf_counter() - t0) / (iters * b)
+                if truth is None:                    # fp32 runs first
+                    truth = found
+                recall = _recall(found, truth)
+
+                dev = idx._rows.device_block_bytes() / n
+                idx._store.snapshot(idx)
+                snap = _dir_bytes(os.path.join(root, "s")) / n
+                baseline.setdefault("dev", dev)
+                baseline.setdefault("snap", snap)
+                rows.append((
+                    f"memory_{dtype}_n{n}", dt * 1e6,
+                    f"dev_B_per_vec={dev:.1f} "
+                    f"dev_save={baseline['dev'] / max(dev, 1e-9):.2f}x "
+                    f"snap_B_per_vec={snap:.1f} "
+                    f"snap_save={baseline['snap'] / max(snap, 1e-9):.2f}x "
+                    f"recall10={recall:.3f}"))
+            finally:
+                shutil.rmtree(root, ignore_errors=True)

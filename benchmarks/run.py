@@ -17,7 +17,7 @@ import sys
 import time
 
 SUITES = ["build", "query", "tiered", "rag", "serve", "store", "shard",
-          "roofline"]
+          "memory", "roofline"]
 
 
 def main() -> None:

@@ -174,6 +174,9 @@ class RetrievalConfig:
     index_kind: str = "hnsw"
     nlist: int = 64                    # ivf: number of inverted lists
     nprobe: int = 8                    # ivf: lists probed per query
+    # row-storage codec (DESIGN.md §9): None -> backend default (fp32);
+    # "bf16"/"int8" shrink device blocks + snapshot pages per vector
+    index_dtype: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,230 @@
+"""VectorCodec — pluggable row storage for every layer of the index
+(DESIGN.md §9).
+
+MeMemo's binding constraint is bytes, not FLOPs: the browser setting caps
+how large a private corpus can live on-device (paper §5, C2/C3), and a
+float32 row path makes every vector cost ``4·D`` bytes in device blocks
+AND in snapshot pages. The codec layer makes the storage dtype a
+first-class, centrally-owned abstraction:
+
+  * ``fp32``  — identity. Bit-for-bit the historical path everywhere
+    (the pre-codec test suite is its parity oracle).
+  * ``bf16``  — truncated mantissa, 2 bytes/dim, no side table.
+  * ``int8``  — scalar quantization with ONE fp32 scale per row
+    (``scale = max|x| / 127``, symmetric): 1 byte/dim + 4 bytes/row.
+
+Dataflow contract (quantize-at-ingest):
+
+  * the ENCODED array is canonical. A lossy index encodes each row once,
+    at ingest (after any metric normalization), and keeps both the
+    encoded bytes and their fp32 decode as parallel host state — the
+    fp32 side stays insertion-ordered, so shard routing, resharding, and
+    WAL replay semantics are untouched (DESIGN.md §8).
+  * device blocks and snapshot pages hold the encoded bytes + scales
+    (the ≈4x memory/disk win); searches compute ASYMMETRIC distance —
+    fp32 query against encoded rows, scales fused into the kernel,
+    fp32 accumulation (kernels/distance_topk.py, gather_distance.py).
+  * because the encoded array is canonical (never re-derived by a
+    second encode), snapshot -> restore -> snapshot is bit-stable and a
+    restored index equals the live one byte for byte, per codec.
+  * secure delete must erase BOTH representations: compaction drops a
+    deleted row's encoded bytes and its fp32 decode from every host
+    array, device block, and store page (DESIGN.md §7/§9).
+
+ANN search under a lossy codec over-fetches ``k · rerank_factor``
+candidates and re-scores them exactly in fp32 from the canonical host
+rows (:func:`rerank_exact`), then returns the best k — widening the
+candidate set the quantized first pass hands to the exact re-scorer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:                                    # jax's own dtype package; always
+    import ml_dtypes                    # present alongside jax, but gate
+    _BF16 = np.dtype(ml_dtypes.bfloat16)   # anyway (bf16 codec degrades
+except Exception:                       # to unavailable, not ImportError
+    ml_dtypes = None
+    _BF16 = None
+
+INF = np.float32(3e38)
+
+CODEC_NAMES = ("fp32", "bf16", "int8")
+
+
+class VectorCodec:
+    """One row-storage format: encode/decode + storage/device dtypes.
+
+    ``name``            factory name ("fp32" | "bf16" | "int8")
+    ``lossy``           False only for fp32 — lossless codecs skip the
+                        encoded side arrays entirely and keep the
+                        historical fp32 path bit-for-bit
+    ``uses_scales``     True when rows carry a per-row fp32 scale
+    ``enc_dtype``       numpy dtype of the encoded array
+    ``default_rerank``  over-fetch factor for ANN search (k·factor
+                        candidates, exact fp32 rerank)
+    """
+
+    name: str = "fp32"
+    lossy: bool = False
+    uses_scales: bool = False
+    default_rerank: int = 1
+    enc_dtype = np.dtype(np.float32)
+
+    # ------------------------------------------------------------ encode
+    def encode(self, x: np.ndarray) -> tuple[np.ndarray, np.ndarray | None]:
+        """fp32 rows [..., D] -> (encoded rows, per-row scales or None)."""
+        return np.ascontiguousarray(x, np.float32), None
+
+    def decode(self, enc: np.ndarray,
+               scales: np.ndarray | None = None) -> np.ndarray:
+        """Inverse of :meth:`encode` -> fp32 rows."""
+        return np.asarray(enc, np.float32)
+
+    def roundtrip(self, x: np.ndarray) -> np.ndarray:
+        return self.decode(*self.encode(x))
+
+    # ----------------------------------------------------------- storage
+    # Snapshot pages / npz exports only hold builtin numpy dtypes (a
+    # bfloat16 array silently loses its dtype through np.save), so the
+    # on-disk view goes through these two hooks.
+    def to_storage(self, enc: np.ndarray) -> np.ndarray:
+        return enc
+
+    def from_storage(self, arr: np.ndarray) -> np.ndarray:
+        return np.asarray(arr, self.enc_dtype)
+
+    # ------------------------------------------------------------- sizes
+    def bytes_per_vector(self, dim: int) -> int:
+        """Encoded bytes per row (scale included when the codec has one)."""
+        return dim * self.enc_dtype.itemsize + (4 if self.uses_scales else 0)
+
+
+class Bf16Codec(VectorCodec):
+    name = "bf16"
+    lossy = True
+    uses_scales = False
+    default_rerank = 1
+
+    def __init__(self):
+        if _BF16 is None:
+            raise RuntimeError("bf16 codec needs ml_dtypes (ships with jax)")
+        self.enc_dtype = _BF16
+
+    def encode(self, x):
+        return np.ascontiguousarray(x, np.float32).astype(self.enc_dtype), None
+
+    def decode(self, enc, scales=None):
+        return np.asarray(enc).astype(np.float32)
+
+    def to_storage(self, enc):
+        # uint16 bit-view: np.save round-trips it losslessly
+        return np.asarray(enc, self.enc_dtype).view(np.uint16)
+
+    def from_storage(self, arr):
+        return np.asarray(arr, np.uint16).view(self.enc_dtype)
+
+
+class Int8Codec(VectorCodec):
+    """Symmetric scalar quantization, one fp32 scale per row:
+    ``scale = max|x| / 127``, ``enc = round(x / scale)`` in [-127, 127].
+    All-zero rows get scale 1.0 so decode stays a plain multiply."""
+
+    name = "int8"
+    lossy = True
+    uses_scales = True
+    default_rerank = 4
+    enc_dtype = np.dtype(np.int8)
+
+    def encode(self, x):
+        x = np.ascontiguousarray(x, np.float32)
+        amax = np.max(np.abs(x), axis=-1)
+        scales = np.where(amax > 0, amax / np.float32(127.0),
+                          np.float32(1.0)).astype(np.float32)
+        q = np.clip(np.rint(x / scales[..., None]), -127, 127)
+        return q.astype(np.int8), scales
+
+    def decode(self, enc, scales=None):
+        if scales is None:
+            raise ValueError("int8 decode needs the per-row scales")
+        return (np.asarray(enc, np.float32)
+                * np.asarray(scales, np.float32)[..., None])
+
+
+_CODECS: dict[str, VectorCodec] = {}
+
+
+def get_codec(name: str) -> VectorCodec:
+    """Codec by name ("fp32" | "bf16" | "int8"); instances are shared."""
+    key = str(name).lower()
+    if key not in CODEC_NAMES:
+        raise ValueError(f"unknown storage dtype {name!r}; expected one of "
+                         f"{CODEC_NAMES}")
+    if key not in _CODECS:
+        _CODECS[key] = {"fp32": VectorCodec, "bf16": Bf16Codec,
+                        "int8": Int8Codec}[key]()
+    return _CODECS[key]
+
+
+def effective_rerank(codec: VectorCodec, rerank_factor: int | None) -> int:
+    """The over-fetch factor a backend should use: the configured value,
+    else the codec default. Lossless codecs never rerank (factor 1) —
+    the first pass already IS the exact fp32 search."""
+    if not codec.lossy:
+        return 1
+    rf = rerank_factor if rerank_factor is not None else codec.default_rerank
+    return max(int(rf), 1)
+
+
+def check_codec_arrays(codec: VectorCodec, arrays: dict, kind: str) -> None:
+    """Cross-dtype restore guard (DESIGN.md §9): encoded pages cannot be
+    transcoded, so an index restoring state written under a different
+    storage dtype must fail loudly and helpfully, not with a KeyError."""
+    has_enc = any(name.split("__")[-1] == "vectors_enc" for name in arrays)
+    if codec.lossy and not has_enc and arrays:
+        raise ValueError(
+            f"cannot restore a {kind!r} index as dtype={codec.name!r}: the "
+            "stored state holds fp32 rows. Storage dtype is part of the "
+            "stored bytes — restore with dtype='fp32', or re-ingest the "
+            f"corpus into a fresh {codec.name} store.")
+    if not codec.lossy and has_enc:
+        raise ValueError(
+            f"cannot restore a {kind!r} index as dtype='fp32': the stored "
+            "state holds codec-encoded rows (bf16/int8 pages cannot be "
+            "transcoded back). Restore with the dtype the store records "
+            "in config.json, or re-ingest into a fresh fp32 store.")
+
+
+def rerank_exact(vectors: np.ndarray, queries: np.ndarray, ids: np.ndarray,
+                 k: int, *, metric: str) -> tuple[np.ndarray, np.ndarray]:
+    """Exact fp32 re-scoring of over-fetched ANN candidates.
+
+    vectors [N, D] — the canonical host rows, fp32, already metric-
+    normalized where the backend stores them normalized (cosine);
+    queries [B, D] raw (normalized here for cosine); ids [B, KK] with -1
+    marking missing candidates -> (dists [B, k], ids [B, k]), missing
+    slots (INF, -1). Ties break on the smaller id, mirroring the device
+    merge's ``tie_break_ids`` (DESIGN.md §8).
+    """
+    q = np.asarray(queries, np.float32)
+    if metric == "cosine":
+        q = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    b = q.shape[0]
+    out_d = np.full((b, k), INF, np.float32)
+    out_i = np.full((b, k), -1, np.int64)
+    ids = np.asarray(ids)
+    for row in range(b):
+        cand = np.unique(ids[row][ids[row] >= 0]).astype(np.int64)
+        if cand.size == 0:
+            continue
+        x = np.asarray(vectors, np.float32)[cand]
+        if metric in ("cosine", "ip"):
+            d = np.float32(1.0) - x @ q[row]
+        else:
+            diff = x - q[row][None, :]
+            d = np.einsum("kd,kd->k", diff, diff)
+        d = d.astype(np.float32)
+        order = np.lexsort((cand, d))[:k]
+        out_d[row, : order.size] = d[order]
+        out_i[row, : order.size] = cand[order]
+    return out_d, out_i

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codec import (check_codec_arrays as _check_codec_arrays,
+                              effective_rerank, get_codec)
 from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
 from repro.core.sharded import ShardedRows
@@ -31,8 +33,10 @@ from repro.kernels import ops
 
 @dataclasses.dataclass
 class FlatIndex:
-    vectors: jax.Array          # [N, D] (normalised if cosine)
+    vectors: jax.Array          # [N, D] (normalised if cosine); may be
+                                # codec-encoded (f32/bf16/int8, DESIGN.md §9)
     metric: str = "cosine"
+    scales: jax.Array | None = None   # [N] per-row decode scales (int8)
 
     @classmethod
     def build(cls, vectors, metric: str = "cosine") -> "FlatIndex":
@@ -48,7 +52,8 @@ class FlatIndex:
             q = q[None]
         if self.metric == "cosine":
             q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-        d, i = ops.flat_topk(self.vectors, q, k, metric=self.metric)
+        d, i = ops.flat_topk(self.vectors, q, k, metric=self.metric,
+                             scales=self.scales)
         if squeeze:
             return d[0], i[0]
         return d, i
@@ -75,19 +80,30 @@ class FlatVectorIndex(VectorIndex):
     """Mutable keyed flat index. Exact by construction, so ``query`` and
     ``exact_query`` coincide. Storage, key->shard routing, and free-slot
     bookkeeping live in ``ShardedRows``; mutations mark the device
-    block(s) stale and the next query re-packs once (DESIGN.md §8)."""
+    block(s) stale and the next query re-packs once (DESIGN.md §8).
+
+    ``dtype`` picks the row codec (fp32 | bf16 | int8, DESIGN.md §9):
+    device blocks and snapshot pages hold the encoded rows; lossy
+    searches run the asymmetric scan, over-fetch ``k·rerank_factor``
+    candidates, and rerank exactly in fp32 from the canonical host rows.
+    """
 
     kind = "flat"
 
     def __init__(self, *, metric: str = "cosine", dim: int | None = None,
-                 n_shards: int = 1):
+                 n_shards: int = 1, dtype: str = "fp32",
+                 rerank_factor: int | None = None):
         if metric not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown metric {metric!r}")
         self.metric = metric
         self.dim = dim
         self.n_shards = int(n_shards)
+        self.dtype = str(dtype)
+        self.rerank_factor = rerank_factor
+        self._codec = get_codec(self.dtype)
         self._rows = ShardedRows(n_shards=self.n_shards, metric=metric,
-                                 dim=dim, normalize_on_pack=True)
+                                 dim=dim, normalize_on_pack=True,
+                                 codec=self._codec)
 
     # ------------------------------------------------------------ mutation
     def _insert_impl(self, key: str, value: np.ndarray) -> None:
@@ -118,11 +134,19 @@ class FlatVectorIndex(VectorIndex):
     def query_batch(self, queries, k: int = 10, **kw):
         """ONE sharded device dispatch for the whole [B, D] batch: every
         shard scans its own rows, per-shard top-k merges through the
-        hierarchical tree (exact top-k either way)."""
+        hierarchical tree (exact top-k either way). Under a lossy codec
+        the scan is asymmetric (fp32 query vs encoded rows), over-fetches
+        ``k·rerank_factor`` candidates, and reranks exactly in fp32 from
+        the canonical host rows (DESIGN.md §9)."""
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
-        d, rows = self._rows.topk(q, k)
+        rf = effective_rerank(self._codec, self.rerank_factor)
+        if rf <= 1:
+            d, rows = self._rows.topk(q, k)
+        else:
+            _, cand = self._rows.topk(q, k * rf)
+            d, rows = self._rows.rerank_topk(q, cand, k)
         keys = [[self._rows.key_of_row(int(r)) if r >= 0 else None
                  for r in row] for row in rows]
         return _pad_results(keys, d, k)
@@ -133,19 +157,38 @@ class FlatVectorIndex(VectorIndex):
     # --------------------------------------------------------- persistence
     # Canonical state only (DESIGN.md §8): shard placement is derived
     # from the keys, so the SAME state_dict restores onto any shard count.
+    # Under a lossy codec the persisted rows are the ENCODED bytes +
+    # scales (DESIGN.md §9) — the fp32 side is their exact decode, so
+    # snapshots shrink with the codec and restore stays bit-for-bit.
     def config_dict(self) -> dict:
         return {"metric": self.metric, "dim": self.dim,
-                "n_shards": self.n_shards}
+                "n_shards": self.n_shards, "dtype": self.dtype,
+                "rerank_factor": self.rerank_factor}
 
     def state_dict(self) -> tuple[dict, dict]:
-        arrays = {"vectors": self._rows.vectors, "alive": self._rows.alive}
+        if self._codec.lossy:
+            arrays = {"vectors_enc":
+                      self._codec.to_storage(self._rows.encoded),
+                      "alive": self._rows.alive}
+            if self._rows.scales is not None:
+                arrays["scales"] = self._rows.scales
+        else:
+            arrays = {"vectors": self._rows.vectors,
+                      "alive": self._rows.alive}
         meta = {"keys": list(self._rows.key_list), "epoch": self._epoch}
         return arrays, meta
 
     def restore_state(self, arrays: dict, meta: dict) -> None:
-        self._rows.restore(np.asarray(arrays["vectors"], np.float32),
-                           list(meta["keys"]),
-                           np.asarray(arrays["alive"], bool))
+        _check_codec_arrays(self._codec, arrays, self.kind)
+        if self._codec.lossy:
+            self._rows.restore_encoded(arrays["vectors_enc"],
+                                       arrays.get("scales"),
+                                       list(meta["keys"]),
+                                       np.asarray(arrays["alive"], bool))
+        else:
+            self._rows.restore(np.asarray(arrays["vectors"], np.float32),
+                               list(meta["keys"]),
+                               np.asarray(arrays["alive"], bool))
         if self._rows.dim:
             self.dim = self._rows.dim
         self._epoch = int(meta["epoch"])

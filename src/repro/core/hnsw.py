@@ -39,8 +39,14 @@ class DeviceGraph:
     ``deleted`` is the tombstone mask (DESIGN.md §3): tombstoned rows stay
     traversable during beam search (hnswlib-style, so graph connectivity
     survives deletions) but are excluded from returned results.
+
+    ``vectors`` holds the rows in their STORAGE dtype (DESIGN.md §9):
+    f32 historically, bf16/int8 under a lossy codec — with ``scales``
+    carrying the int8 per-row decode scales. Every distance decodes in
+    fp32 (fused into the gather kernel), so HBM holds the small encoding
+    while the math stays asymmetric fp32.
     """
-    vectors: jax.Array      # [N, D] f32 (normalised if cosine)
+    vectors: jax.Array      # [N, D] storage dtype (normalised if cosine)
     neighbors0: jax.Array   # [N, 2M] int32 (-1 pad)
     upper: jax.Array        # [L, N, M] int32 (-1 pad); L may be 0
     levels: jax.Array       # [N] int32
@@ -48,29 +54,39 @@ class DeviceGraph:
     deleted: jax.Array      # [N] bool tombstones
     max_level: int          # static
     metric: str             # static
+    scales: jax.Array | None = None   # [N] f32 decode scales (int8 codec)
 
     def tree_flatten(self):
         return ((self.vectors, self.neighbors0, self.upper, self.levels,
-                 self.entry, self.deleted), (self.max_level, self.metric))
+                 self.entry, self.deleted, self.scales),
+                (self.max_level, self.metric))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, max_level=aux[0], metric=aux[1])
+        (vectors, neighbors0, upper, levels, entry, deleted,
+         scales) = children
+        return cls(vectors, neighbors0, upper, levels, entry, deleted,
+                   max_level=aux[0], metric=aux[1], scales=scales)
 
     @property
     def n(self) -> int:
         return self.vectors.shape[0]
 
 
-def to_device_graph(g: HNSWGraph, deleted: np.ndarray | None = None
-                    ) -> DeviceGraph:
+def to_device_graph(g: HNSWGraph, deleted: np.ndarray | None = None,
+                    enc: np.ndarray | None = None,
+                    scales: np.ndarray | None = None) -> DeviceGraph:
     """Full host->device conversion (the from-scratch path; incremental
-    updates go through :func:`apply_row_updates`)."""
+    updates go through :func:`apply_row_updates`).
+
+    ``enc``/``scales``: codec-encoded rows to upload INSTEAD of the host
+    f32 vectors (same [N, D] capacity view, DESIGN.md §9)."""
     n = g.vectors.shape[0]
     if deleted is None:
         deleted = np.zeros(n, bool)
     return DeviceGraph(
-        vectors=jnp.asarray(g.vectors, jnp.float32),
+        vectors=(jnp.asarray(g.vectors, jnp.float32) if enc is None
+                 else jnp.asarray(enc)),
         neighbors0=jnp.asarray(g.neighbors0, jnp.int32),
         upper=jnp.asarray(g.upper, jnp.int32),
         levels=jnp.asarray(g.levels, jnp.int32),
@@ -78,6 +94,7 @@ def to_device_graph(g: HNSWGraph, deleted: np.ndarray | None = None
         deleted=jnp.asarray(deleted[:n], bool),
         max_level=int(g.max_level),
         metric=g.metric,
+        scales=None if scales is None else jnp.asarray(scales, jnp.float32),
     )
 
 
@@ -94,8 +111,24 @@ def _scatter_rows_jit(vectors, neighbors0, upper, levels,
     return vectors, neighbors0, upper, levels
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+def _scatter_rows_scaled_jit(vectors, scales, neighbors0, upper, levels,
+                             rows, v_new, s_new, n0_new, u_new, l_new):
+    """Codec variant of the donated scatter: the encoded row payload and
+    its per-row scale travel together (DESIGN.md §9)."""
+    vectors = vectors.at[rows].set(v_new)
+    scales = scales.at[rows].set(s_new)
+    neighbors0 = neighbors0.at[rows].set(n0_new)
+    if upper.shape[0]:
+        upper = upper.at[:, rows].set(u_new)
+    levels = levels.at[rows].set(l_new)
+    return vectors, scales, neighbors0, upper, levels
+
+
 def apply_row_updates(dg: DeviceGraph, g: HNSWGraph, rows,
-                      deleted: np.ndarray | None = None) -> DeviceGraph:
+                      deleted: np.ndarray | None = None,
+                      enc: np.ndarray | None = None,
+                      scales: np.ndarray | None = None) -> DeviceGraph:
     """Incremental device-graph sync (DESIGN.md §3): copy only the dirty
     ``rows`` of the host graph into the resident device tensors — O(|rows|)
     transfer + in-place donated scatter instead of a full re-upload.
@@ -105,6 +138,10 @@ def apply_row_updates(dg: DeviceGraph, g: HNSWGraph, rows,
     Shapes must match (the host graph is the same capacity-padded view the
     resident graph was built from). ``deleted`` refreshes the tombstone
     mask; entry/max_level are always refreshed (scalar-cheap).
+
+    ``enc``/``scales``: the codec-encoded capacity view when the resident
+    graph stores encoded rows — dirty rows scatter the encoded payload
+    (+ scale) instead of the f32 vectors (DESIGN.md §9).
     """
     if dg.vectors.shape != g.vectors.shape or dg.upper.shape != g.upper.shape:
         raise ValueError("capacity/layer shape changed; full rebuild required")
@@ -118,14 +155,30 @@ def apply_row_updates(dg: DeviceGraph, g: HNSWGraph, rows,
         rp = np.concatenate([rows, pad])
         u_new = (g.upper[:, rp] if g.upper.shape[0]
                  else np.zeros((0, bucket, 1), np.int32))
-        vectors, neighbors0, upper, levels = _scatter_rows_jit(
-            dg.vectors, dg.neighbors0, dg.upper, dg.levels,
-            jnp.asarray(rp), jnp.asarray(g.vectors[rp], jnp.float32),
-            jnp.asarray(g.neighbors0[rp], jnp.int32),
-            jnp.asarray(u_new, jnp.int32),
-            jnp.asarray(g.levels[rp], jnp.int32))
-        dg = dataclasses.replace(dg, vectors=vectors, neighbors0=neighbors0,
-                                 upper=upper, levels=levels)
+        v_new = (jnp.asarray(g.vectors[rp], jnp.float32) if enc is None
+                 else jnp.asarray(enc[rp]))
+        if scales is None:
+            vectors, neighbors0, upper, levels = _scatter_rows_jit(
+                dg.vectors, dg.neighbors0, dg.upper, dg.levels,
+                jnp.asarray(rp), v_new,
+                jnp.asarray(g.neighbors0[rp], jnp.int32),
+                jnp.asarray(u_new, jnp.int32),
+                jnp.asarray(g.levels[rp], jnp.int32))
+            dg = dataclasses.replace(dg, vectors=vectors,
+                                     neighbors0=neighbors0,
+                                     upper=upper, levels=levels)
+        else:
+            vectors, scl, neighbors0, upper, levels = \
+                _scatter_rows_scaled_jit(
+                    dg.vectors, dg.scales, dg.neighbors0, dg.upper,
+                    dg.levels, jnp.asarray(rp), v_new,
+                    jnp.asarray(scales[rp], jnp.float32),
+                    jnp.asarray(g.neighbors0[rp], jnp.int32),
+                    jnp.asarray(u_new, jnp.int32),
+                    jnp.asarray(g.levels[rp], jnp.int32))
+            dg = dataclasses.replace(dg, vectors=vectors, scales=scl,
+                                     neighbors0=neighbors0, upper=upper,
+                                     levels=levels)
     new_deleted = dg.deleted if deleted is None \
         else jnp.asarray(deleted[: dg.n], bool)
     return dataclasses.replace(
@@ -146,14 +199,16 @@ def batched_dist(metric: str, q: jax.Array, x: jax.Array) -> jax.Array:
 
 
 def gather_distance(metric: str, vectors: jax.Array, q: jax.Array,
-                    ids: jax.Array) -> jax.Array:
+                    ids: jax.Array,
+                    scales: jax.Array | None = None) -> jax.Array:
     """Fused gather(HBM)->distance: ids [B, K] (clamped), q [B, D] -> [B, K].
 
     On TPU this routes to kernels/gather_distance.py; the jnp fallback keeps
     identical semantics (invalid ids must be masked by the caller).
+    ``scales`` fuses the codec decode into the distance (DESIGN.md §9).
     """
     from repro.kernels import ops
-    return ops.gather_distance(vectors, q, ids, metric=metric)
+    return ops.gather_distance(vectors, q, ids, metric=metric, scales=scales)
 
 
 def _prep_queries(g: DeviceGraph, queries) -> jax.Array:
@@ -183,7 +238,7 @@ def _greedy_layer(g: DeviceGraph, q: jax.Array, ep: jax.Array,
         nbrs = jnp.take(nbr_table, ep, axis=0)                 # [B, M]
         valid = nbrs >= 0
         ids = jnp.clip(nbrs, 0, g.n - 1)
-        d = gather_distance(g.metric, g.vectors, q, ids)
+        d = gather_distance(g.metric, g.vectors, q, ids, g.scales)
         d = jnp.where(valid, d, INF)
         j = jnp.argmin(d, axis=-1)
         best_d = jnp.take_along_axis(d, j[:, None], 1)[:, 0]
@@ -229,7 +284,7 @@ def _beam_search(g: DeviceGraph, q: jax.Array, ep: jax.Array,
         nbrs = jnp.take(g.neighbors0, jnp.clip(cur, 0, g.n - 1), axis=0)
         valid = (nbrs >= 0) & has[:, None]
         ids = jnp.clip(nbrs, 0, g.n - 1)
-        d = gather_distance(g.metric, g.vectors, q, ids)
+        d = gather_distance(g.metric, g.vectors, q, ids, g.scales)
         d = jnp.where(valid, d, INF)
         # merge into beam: two-key sort then adjacent-dup masking
         all_d = jnp.concatenate([beam_d, d], axis=1)         # [B, ef+2M]
@@ -255,7 +310,10 @@ def _beam_search(g: DeviceGraph, q: jax.Array, ep: jax.Array,
 def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
                 max_iters: int | None):
     ep = jnp.broadcast_to(g.entry, q.shape[:1])
-    ep_dist = batched_dist(g.metric, q, jnp.take(g.vectors, ep, axis=0)[:, None])[:, 0]
+    x0 = jnp.take(g.vectors, ep, axis=0)
+    if g.scales is not None:                 # decode the entry row (§9)
+        x0 = x0.astype(jnp.float32) * jnp.take(g.scales, ep)[:, None]
+    ep_dist = batched_dist(g.metric, q, x0[:, None])[:, 0]
     for layer in range(g.max_level, 0, -1):      # static unroll (few layers)
         ep, ep_dist = _greedy_layer(g, q, ep, ep_dist, layer)
     beam_i, beam_d = _beam_search(g, q, ep, ep_dist, ef, max_iters)

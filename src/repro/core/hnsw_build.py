@@ -197,10 +197,15 @@ class SequentialBuilder:
         return np.array([e for _, e in selected], np.int32)
 
     # -- Alg. 1: insert -------------------------------------------------------
-    def insert(self, vec: np.ndarray, level: int | None = None) -> int:
+    def insert(self, vec: np.ndarray, level: int | None = None,
+               prenormalized: bool = False) -> int:
+        # prenormalized: the caller already put ``vec`` in its final
+        # stored form (metric normalization + codec quantization,
+        # DESIGN.md §9) — re-normalizing here would perturb the bytes the
+        # snapshot layer treats as canonical.
         self._grow(self.n + 1)
         q = np.asarray(vec, np.float32)
-        if self.metric == "cosine":
+        if self.metric == "cosine" and not prenormalized:
             q = q / max(float(np.linalg.norm(q)), 1e-12)
         node = self.n
         self.vectors[node] = q
@@ -287,17 +292,23 @@ def build_sequential(vectors: np.ndarray, *, M: int = 16,
 # ---------------------------------------------------------------------------
 def bulk_build(vectors: np.ndarray, *, M: int = 16, ef_construction: int = 200,
                metric: str = "cosine", seed: int = 0,
-               bootstrap: int = 256, batch_size: int = 1024) -> HNSWGraph:
+               bootstrap: int = 256, batch_size: int = 1024,
+               prenormalized: bool = False) -> HNSWGraph:
     """Assign levels up-front; bootstrap sequentially; then batch-insert.
 
     Each batch: ONE batched JAX beam search against the prefix graph finds
     every member's efConstruction candidates simultaneously (the lock-step
     regime of DESIGN.md §2), then edges are connected host-side with mutual-M
     pruning by distance.
+
+    ``prenormalized``: rows are already in their final stored form (codec
+    quantization happens after normalization, DESIGN.md §9) — skip the
+    metric prep.
     """
     from repro.core import hnsw as jhnsw   # lazy: keeps numpy path import-light
 
-    v = _prep(vectors, metric)
+    v = (np.ascontiguousarray(vectors, dtype=np.float32) if prenormalized
+         else _prep(vectors, metric))
     n, d = v.shape
     rng = np.random.default_rng(seed)
     mL = 1.0 / np.log(M) if M > 1 else 1.0
@@ -312,7 +323,7 @@ def bulk_build(vectors: np.ndarray, *, M: int = 16, ef_construction: int = 200,
     b = SequentialBuilder(d, M=M, ef_construction=ef_construction,
                           metric=metric, capacity=n, seed=seed)
     for i in range(nb):
-        b.insert(v_ord[i], level=int(lv_ord[i]))
+        b.insert(v_ord[i], level=int(lv_ord[i]), prenormalized=prenormalized)
 
     m_max0 = 2 * M
     lmax_cap = max(int(lv_ord.max(initial=0)), 1)

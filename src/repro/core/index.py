@@ -72,6 +72,14 @@ class VectorIndex(abc.ABC):
         ``repro.core.sharded.shard_of_key`` everywhere."""
         return 1
 
+    # --------------------------------------------------------------- codec
+    @property
+    def storage_dtype(self) -> str:
+        """Row-storage codec name (DESIGN.md §9): "fp32" | "bf16" |
+        "int8". Backends that accept ``dtype=`` set it; the serving layer
+        is codec-transparent and only surfaces this for logging/stats."""
+        return getattr(self, "dtype", "fp32")
+
     # -------------------------------------------------------------- epoch
     @property
     def mutation_epoch(self) -> int:
@@ -326,8 +334,15 @@ def make_index(kind: str, store=None, **cfg) -> VectorIndex:
     """Create a VectorIndex backend by name.
 
     kind: "flat" | "ivf" | "hnsw" | "tiered". ``cfg`` passes through to the
-    backend constructor (common: metric, dim, n_shards; hnsw/tiered: M,
-    ef_construction, ef_search; ivf: nlist, nprobe).
+    backend constructor (common: metric, dim, n_shards, dtype,
+    rerank_factor; hnsw/tiered: M, ef_construction, ef_search; ivf:
+    nlist, nprobe).
+
+    dtype selects the row-storage codec (DESIGN.md §9): "fp32" (default,
+    bit-for-bit the historical path), "bf16", or "int8" (scalar-quantized,
+    per-row scale). Encoded rows live in the device blocks and snapshot
+    pages; lossy ANN searches over-fetch ``k·rerank_factor`` candidates
+    and rerank exactly in fp32 from the canonical host rows.
 
     n_shards partitions the corpus over a device mesh (DESIGN.md §8):
     CRUD routes to the owning shard by key hash, queries fan out to every
@@ -352,7 +367,8 @@ def make_index(kind: str, store=None, **cfg) -> VectorIndex:
             store = IndexStore(str(store))
         if store.has_state():
             return store.load_index(expect_kind=kind,
-                                    n_shards=cfg.get("n_shards"))
+                                    n_shards=cfg.get("n_shards"),
+                                    expect_dtype=cfg.get("dtype"))
         idx = _construct(kind, cfg)
         store.attach(idx)
         return idx
@@ -370,11 +386,15 @@ def make_index_from_config(cfg, kind: str | None = None, store=None,
         params = dict(dim=cfg.dim, metric=cfg.metric,
                       nlist=getattr(cfg, "nlist", 64),
                       nprobe=getattr(cfg, "nprobe", 8))
-    # only forward n_shards when the config (or caller) actually sets it:
-    # an unconditional default of 1 would count as an explicit override in
-    # make_index and silently reshard a warm multi-shard store on restore
+    # only forward n_shards / index_dtype when the config (or caller)
+    # actually sets them: an unconditional default would count as an
+    # explicit override in make_index — silently resharding a warm
+    # multi-shard store, or tripping the cross-dtype restore rejection
     n_sh = getattr(cfg, "n_shards", None)
     if n_sh is not None:
         params["n_shards"] = n_sh
+    dt = getattr(cfg, "index_dtype", None)
+    if dt is not None:
+        params["dtype"] = dt
     params.update(overrides)
     return make_index(kind, store=store, **params)

@@ -44,7 +44,10 @@ import numpy as np
 
 from repro.core import hnsw as jhnsw
 from repro.core import hnsw_build as build
+from repro.core.codec import (check_codec_arrays as _check_codec_arrays,
+                              effective_rerank, get_codec, rerank_exact)
 from repro.core.flat import FlatIndex
+from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
 from repro.core.sharded import fanout_exact_topk, shard_of_key
 
@@ -55,7 +58,8 @@ class HNSW(VectorIndex):
     def __init__(self, distance_function: str = "cosine", *, M: int = 16,
                  ef_construction: int = 200, ef_search: int = 64,
                  seed: int = 0, use_bulk_build: bool = False,
-                 n_shards: int = 1):
+                 n_shards: int = 1, dtype: str = "fp32",
+                 rerank_factor: int | None = None):
         if distance_function not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown distanceFunction {distance_function!r}")
         self.metric = distance_function
@@ -65,10 +69,22 @@ class HNSW(VectorIndex):
         self.seed = seed
         self.use_bulk_build = use_bulk_build
         self.n_shards = int(n_shards)
+        # row-storage codec (DESIGN.md §9): lossy codecs quantize each row
+        # once at ingest (after metric normalization); the encoded bytes
+        # are canonical — the device graph and snapshot pages hold them,
+        # the builder's fp32 vectors are their exact decode, and ANN
+        # queries over-fetch k·rerank_factor then rerank exactly in fp32
+        self.dtype = str(dtype)
+        self.rerank_factor = rerank_factor
+        self._codec = get_codec(self.dtype)
         self._keys: list[str] = []                 # node id -> key
         self._key2id: dict[str, int] = {}          # live keys only
         self._deleted = np.zeros(0, bool)          # tombstones, capacity-sized
         self._builder: build.SequentialBuilder | None = None
+        # canonical encoded rows [n, D] + per-row scales [n] (lossy only;
+        # node-id aligned with the builder, appended per insert)
+        self._enc: np.ndarray | None = None
+        self._scales: np.ndarray | None = None
         # compat only: external code reads `idx._graph or idx._builder.graph()`
         self._graph: build.HNSWGraph | None = None
         self._device_graph: jhnsw.DeviceGraph | None = None
@@ -83,7 +99,8 @@ class HNSW(VectorIndex):
             self._shards = [
                 HNSW(distance_function=distance_function, M=M,
                      ef_construction=ef_construction, ef_search=ef_search,
-                     seed=seed + j, use_bulk_build=False, n_shards=1)
+                     seed=seed + j, use_bulk_build=False, n_shards=1,
+                     dtype=self.dtype, rerank_factor=rerank_factor)
                 for j in range(self.n_shards)]
 
     # --------------------------------------------------- shard plumbing
@@ -101,6 +118,47 @@ class HNSW(VectorIndex):
         self._epoch += child._epoch - before
 
     # ------------------------------------------------------------ mutation
+    def _quantize(self, v: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray | None, float | None]:
+        """Put one raw row in its final stored form (DESIGN.md §9):
+        metric normalization, then ONE codec encode whose decode becomes
+        the stored fp32 row — so the encoded bytes are canonical and the
+        snapshot round-trip is bit-stable."""
+        if self.metric == "cosine":
+            v = v / max(float(np.linalg.norm(v)), 1e-12)
+        enc, scales = self._codec.encode(v[None])
+        v = self._codec.decode(enc, scales)[0]
+        return v, enc[0], (None if scales is None else scales[0])
+
+    def _append_enc(self, enc_row: np.ndarray,
+                    scale: float | None) -> None:
+        if self._enc is None:
+            self._enc = np.zeros((0, enc_row.shape[-1]),
+                                 self._codec.enc_dtype)
+        self._enc = np.concatenate([self._enc, enc_row[None]])
+        if scale is not None:
+            if self._scales is None:
+                self._scales = np.zeros(0, np.float32)
+            self._scales = np.concatenate(
+                [self._scales, np.asarray([scale], np.float32)])
+
+    def _insert_node(self, key: str, v: np.ndarray,
+                     enc_row: np.ndarray | None,
+                     scale: float | None) -> None:
+        """Commit one ALREADY-FINAL row (quantized by ``_quantize`` or
+        carried over by compaction) to the builder + enc side arrays."""
+        if self._builder is None:
+            self._builder = build.SequentialBuilder(
+                v.shape[-1], M=self.M, ef_construction=self.ef_construction,
+                metric=self.metric, seed=self.seed)
+        node = self._builder.insert(v, prenormalized=True)
+        assert node == len(self._keys)
+        self._keys.append(key)
+        self._key2id[key] = node
+        if enc_row is not None:
+            self._append_enc(enc_row, scale)
+        self._bump_epoch()
+
     def _insert_impl(self, key: str, value: np.ndarray) -> None:
         """Upsert one (key, vector); existing keys are updated in place."""
         if self.n_shards > 1:
@@ -114,6 +172,10 @@ class HNSW(VectorIndex):
         if key in self._key2id:
             self._delete_impl(key)
         v = np.asarray(value, np.float32)
+        if self._codec.lossy:
+            v, enc_row, scale = self._quantize(v)
+            self._insert_node(key, v, enc_row, scale)
+            return
         if self._builder is None:
             self._builder = build.SequentialBuilder(
                 v.shape[-1], M=self.M, ef_construction=self.ef_construction,
@@ -143,9 +205,20 @@ class HNSW(VectorIndex):
                 self._insert_impl(k, v)
             return
         if self.use_bulk_build and self._builder is None:
+            values = np.asarray(values, np.float32)
+            if self._codec.lossy:
+                # normalize + quantize the whole batch once; the graph is
+                # built over the decoded (final, stored) rows (§9)
+                if self.metric == "cosine":
+                    values = normalize_rows(values)
+                enc, scales = self._codec.encode(values)
+                values = self._codec.decode(enc, scales)
+                self._enc = enc
+                self._scales = scales
             g = build.bulk_build(
                 values, M=self.M, ef_construction=self.ef_construction,
-                metric=self.metric, seed=self.seed)
+                metric=self.metric, seed=self.seed,
+                prenormalized=self._codec.lossy)
             # adopt as mutable builder state so a LATER bulk_insert / insert
             # appends instead of silently replacing the graph
             self._builder = build.SequentialBuilder.from_graph(
@@ -203,14 +276,27 @@ class HNSW(VectorIndex):
         live = np.flatnonzero(~self._deleted[:n])
         vecs = self._builder.vectors[live].copy()
         keys = [self._keys[i] for i in live]
+        # carry the CANONICAL encoded rows through the rebuild: a deleted
+        # row's encoded bytes + scale die here with its fp32 bytes
+        # (secure delete, §9), while live rows keep their exact encoding
+        # (re-quantizing an already-quantized row would perturb bytes)
+        enc = self._enc[live].copy() if self._enc is not None else None
+        scl = self._scales[live].copy() if self._scales is not None else None
         self._builder = None                       # fresh graph + fresh RNG
         self._keys = []
         self._key2id = {}
         self._deleted = np.zeros(0, bool)
+        self._enc = None
+        self._scales = None
         self._device_graph = None
         self._deleted_dirty = False
-        for k, v in zip(keys, vecs):
-            self._insert_impl(k, v)                # bumps epoch per insert
+        if self._codec.lossy:
+            for i, (k, v) in enumerate(zip(keys, vecs)):
+                self._insert_node(k, v, enc[i],    # bumps epoch per insert
+                                  None if scl is None else scl[i])
+        else:
+            for k, v in zip(keys, vecs):
+                self._insert_impl(k, v)            # bumps epoch per insert
         if not keys:
             self._bump_epoch()
 
@@ -221,8 +307,27 @@ class HNSW(VectorIndex):
             self._deleted = np.concatenate([self._deleted, pad])
 
     # ----------------------------------------------------- device residency
+    def _enc_capacity(self, cap: int
+                      ) -> tuple[np.ndarray | None, np.ndarray | None]:
+        """Canonical encoded rows padded to the builder's capacity view
+        (zeros beyond ``n`` — matching the builder's zero rows), the
+        shape the device graph and snapshots use (§9)."""
+        if self._enc is None:
+            return None, None
+        n, d = self._enc.shape
+        enc = np.zeros((cap, d), self._codec.enc_dtype)
+        enc[:n] = self._enc
+        scl = None
+        if self._scales is not None:
+            scl = np.zeros(cap, np.float32)
+            scl[:n] = self._scales
+        return enc, scl
+
     def _dg(self) -> jhnsw.DeviceGraph:
-        """Resident device graph, synced incrementally when possible."""
+        """Resident device graph, synced incrementally when possible.
+        Under a lossy codec the resident vectors are the ENCODED rows
+        (+ scale table): HBM holds ``codec.bytes_per_vector`` per row and
+        every distance decodes inside the gather kernel (§9)."""
         if self._builder is None:
             raise ValueError("index is empty")
         b = self._builder
@@ -231,14 +336,21 @@ class HNSW(VectorIndex):
         dg = self._device_graph
         if dg is None or dg.vectors.shape != g.vectors.shape:
             # first upload, or capacity growth: full conversion
-            self._device_graph = jhnsw.to_device_graph(g, self._deleted)
+            enc, scl = self._enc_capacity(g.vectors.shape[0])
+            self._device_graph = jhnsw.to_device_graph(
+                g, self._deleted, enc=enc, scales=scl)
             b.journal.clear()
             self._deleted_dirty = False
         elif b.journal or self._deleted_dirty or dg.max_level != g.max_level:
-            # incremental: only dirty rows travel to the device
+            # incremental: only dirty rows travel to the device. The
+            # scatter indexes enc/scales by dirty row id (< n), so the
+            # canonical [n, D] arrays are handed over AS-IS — building
+            # the capacity-padded view here would make every sync O(N)
+            # host work instead of O(|dirty|)
             self._device_graph = jhnsw.apply_row_updates(
                 dg, g, b.journal,
-                self._deleted if self._deleted_dirty else None)
+                self._deleted if self._deleted_dirty else None,
+                enc=self._enc, scales=self._scales)
             b.journal.clear()
             self._deleted_dirty = False
         return self._device_graph
@@ -260,9 +372,17 @@ class HNSW(VectorIndex):
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
         if self.n_shards > 1:
             return self._query_batch_sharded(q, k, ef)
-        ids, dists = jhnsw.search_graph(self._dg(), q, k=k,
+        rf = effective_rerank(self._codec, self.rerank_factor)
+        ids, dists = jhnsw.search_graph(self._dg(), q, k=k * rf,
                                         ef=ef or self.ef_search)
         ids, dists = np.asarray(ids), np.asarray(dists)
+        if rf > 1:
+            # over-fetched beam candidates rerank exactly in fp32 against
+            # the canonical host rows (§9); beam already dropped
+            # tombstoned ids, so every candidate is live
+            n = self._builder.n
+            dists, ids = rerank_exact(self._builder.vectors[:n], q, ids, k,
+                                      metric=self.metric)
         keys = [[self._keys[i] if i >= 0 else None for i in row] for row in ids]
         return keys, dists
 
@@ -341,9 +461,13 @@ class HNSW(VectorIndex):
         squeeze = q.ndim == 1
         if squeeze:
             q = q[None]
+        # lossy codecs: rows are already in final stored form (normalized
+        # BEFORE quantization, §9) — re-normalizing the quantized rows
+        # here would score different values than the 1-shard exact path
         d, g = fanout_exact_topk(groups, q, min(k, len(items)),
                                  metric=self.metric,
-                                 normalize=self.metric == "cosine")
+                                 normalize=(self.metric == "cosine"
+                                            and not self._codec.lossy))
         keys = [[items[int(j)][1] if j >= 0 else None for j in row]
                 for row in g]
         if squeeze:
@@ -391,7 +515,8 @@ class HNSW(VectorIndex):
                 "ef_construction": self.ef_construction,
                 "ef_search": self.ef_search, "seed": self.seed,
                 "use_bulk_build": self.use_bulk_build,
-                "n_shards": self.n_shards}
+                "n_shards": self.n_shards, "dtype": self.dtype,
+                "rerank_factor": self.rerank_factor}
 
     def state_dict(self) -> tuple[dict, dict]:
         """Full mutation-determined host state, CAPACITY-padded: the
@@ -424,19 +549,34 @@ class HNSW(VectorIndex):
                     "next_seq": self._next_seq}
             return arrays, meta
         if self._builder is None:
-            arrays = {"vectors": np.zeros((0, 0), np.float32),
-                      "levels": np.zeros(0, np.int32),
+            arrays = {"levels": np.zeros(0, np.int32),
                       "neighbors0": np.zeros((0, 2 * self.M), np.int32),
                       "upper": np.zeros((0, 0, self.M), np.int32),
                       "deleted": np.zeros(0, bool)}
+            if self._codec.lossy:
+                arrays["vectors_enc"] = self._codec.to_storage(
+                    np.zeros((0, 0), self._codec.enc_dtype))
+                if self._codec.uses_scales:
+                    arrays["scales"] = np.zeros(0, np.float32)
+            else:
+                arrays["vectors"] = np.zeros((0, 0), np.float32)
             meta = {"keys": [], "epoch": self._epoch, "n": 0, "entry": -1,
                     "max_level": -1, "max_level_cap": 12, "rng_state": None}
             return arrays, meta
         b = self._builder
         self._ensure_tombstones()
-        arrays = {"vectors": b.vectors, "levels": b.levels,
-                  "neighbors0": b.neighbors0, "upper": b.upper,
-                  "deleted": self._deleted}
+        arrays = {"levels": b.levels, "neighbors0": b.neighbors0,
+                  "upper": b.upper, "deleted": self._deleted}
+        if self._codec.lossy:
+            # persist the CANONICAL encoded rows + scales, capacity-padded
+            # like the builder arrays: ≈4x smaller pages, and restore
+            # decodes back to the exact builder vectors (§9)
+            enc, scl = self._enc_capacity(b.vectors.shape[0])
+            arrays["vectors_enc"] = self._codec.to_storage(enc)
+            if scl is not None:
+                arrays["scales"] = scl
+        else:
+            arrays["vectors"] = b.vectors
         meta = {"keys": list(self._keys), "epoch": self._epoch,
                 "n": int(b.n), "entry": int(b.entry),
                 "max_level": int(b.max_level),
@@ -445,6 +585,7 @@ class HNSW(VectorIndex):
         return arrays, meta
 
     def restore_state(self, arrays: dict, meta: dict) -> None:
+        _check_codec_arrays(self._codec, arrays, self.kind)
         rec_shards = int(meta.get("n_shards", 1))
         if rec_shards != self.n_shards:
             # shard-count changed between snapshot and restore: replay the
@@ -467,11 +608,27 @@ class HNSW(VectorIndex):
             self._keys = []
             self._key2id = {}
             self._deleted = np.zeros(0, bool)
+            self._enc = None
+            self._scales = None
             self._epoch = int(meta["epoch"])
             self._device_graph = None
             self._deleted_dirty = False
             return
-        vectors = np.asarray(arrays["vectors"], np.float32)
+        n = int(meta["n"])
+        if self._codec.lossy:
+            # adopt the stored ENCODED rows as canonical and decode the
+            # builder's fp32 side from them — never re-encode (§9)
+            enc_cap = self._codec.from_storage(arrays["vectors_enc"])
+            scl_cap = (np.asarray(arrays["scales"], np.float32)
+                       if "scales" in arrays else None)
+            vectors = self._codec.decode(enc_cap, scl_cap)
+            self._enc = np.ascontiguousarray(enc_cap[:n])
+            self._scales = (None if scl_cap is None
+                            else np.ascontiguousarray(scl_cap[:n]))
+        else:
+            vectors = np.asarray(arrays["vectors"], np.float32)
+            self._enc = None
+            self._scales = None
         b = build.SequentialBuilder(
             vectors.shape[1], M=self.M,
             ef_construction=self.ef_construction, metric=self.metric,
@@ -481,7 +638,7 @@ class HNSW(VectorIndex):
         b.levels = np.asarray(arrays["levels"], np.int32)
         b.neighbors0 = np.asarray(arrays["neighbors0"], np.int32)
         b.upper = np.asarray(arrays["upper"], np.int32)
-        b.n = int(meta["n"])
+        b.n = n
         b.entry = int(meta["entry"])
         b.max_level = int(meta["max_level"])
         b.rng.bit_generator.state = meta["rng_state"]
@@ -494,19 +651,36 @@ class HNSW(VectorIndex):
         self._device_graph = None
         self._deleted_dirty = False
 
-    @staticmethod
-    def _canonical_rows(arrays: dict, meta: dict, rec_shards: int
-                        ) -> list[tuple[int, str, np.ndarray]]:
+    def _recorded_rows(self, arrays: dict, prefix: str = ""):
+        """Recorded rows -> (fp32 vectors, encoded rows | None,
+        scales | None), whatever codec wrote them (§9)."""
+        if f"{prefix}vectors" in arrays:
+            return (np.asarray(arrays[f"{prefix}vectors"], np.float32),
+                    None, None)
+        enc = self._codec.from_storage(arrays[f"{prefix}vectors_enc"])
+        scl = arrays.get(f"{prefix}scales")
+        return self._codec.decode(enc, scl), enc, scl
+
+    def _canonical_rows(self, arrays: dict, meta: dict, rec_shards: int
+                        ) -> list[tuple]:
         """Live rows of a recorded state in canonical insertion order:
-        [(seq, key, vector)] — the shard-layout-independent view."""
-        rows: list[tuple[int, str, np.ndarray]] = []
+        [(seq, key, vector, enc_row|None, scale|None)] — the
+        shard-layout-independent view, encodings included so a reshard
+        replay keeps the canonical bytes instead of re-quantizing (§9)."""
+        def _row(vecs, enc, scl, node):
+            return (vecs[node],
+                    None if enc is None else enc[node],
+                    None if scl is None else scl[node])
+
+        rows: list[tuple] = []
         if rec_shards == 1:
             n = int(meta["n"])
             deleted = np.asarray(arrays["deleted"], bool)
-            vecs = np.asarray(arrays["vectors"], np.float32)
+            vecs, enc, scl = self._recorded_rows(arrays)
             for node in range(n):
                 if not deleted[node]:
-                    rows.append((node, meta["keys"][node], vecs[node]))
+                    rows.append((node, meta["keys"][node],
+                                 *_row(vecs, enc, scl, node)))
             return rows
         seqmap = {k: int(v) for k, v in meta["seq"]}
         for j, m in enumerate(meta["shards"]):
@@ -514,13 +688,36 @@ class HNSW(VectorIndex):
             if n == 0:
                 continue
             deleted = np.asarray(arrays[f"s{j}__deleted"], bool)
-            vecs = np.asarray(arrays[f"s{j}__vectors"], np.float32)
+            vecs, enc, scl = self._recorded_rows(arrays, prefix=f"s{j}__")
             for node in range(n):
                 key = m["keys"][node]
                 if not deleted[node]:
-                    rows.append((seqmap[key], key, vecs[node]))
+                    rows.append((seqmap[key], key,
+                                 *_row(vecs, enc, scl, node)))
         rows.sort(key=lambda r: r[0])
         return rows
+
+    def _insert_canonical(self, key: str, vec: np.ndarray,
+                          enc_row: np.ndarray | None,
+                          scale: float | None) -> None:
+        """Reshard-replay insert of an already-final row: routes like
+        ``_insert_impl`` but ADOPTS the recorded encoding instead of
+        re-quantizing — re-encoding a decoded row is not guaranteed to
+        reproduce the same scale bytes, and the canonical encoding must
+        survive a reshard (§9). fp32 rows take the historical replay
+        path unchanged."""
+        if self.n_shards > 1:
+            s = shard_of_key(key, self.n_shards)
+            self._mirror(self._shards[s], self._shards[s]._insert_canonical,
+                         key, vec, enc_row, scale)
+            self._key2shard[key] = s
+            self._seq[key] = self._next_seq
+            self._next_seq += 1
+            return
+        if enc_row is None:
+            self._insert_impl(key, vec)
+            return
+        self._insert_node(key, vec, enc_row, scale)
 
     def _restore_resharded(self, arrays: dict, meta: dict,
                            rec_shards: int) -> None:
@@ -535,6 +732,8 @@ class HNSW(VectorIndex):
         self._keys = []
         self._key2id = {}
         self._deleted = np.zeros(0, bool)
+        self._enc = None
+        self._scales = None
         self._device_graph = None
         self._deleted_dirty = False
         self._key2shard = {}
@@ -545,13 +744,14 @@ class HNSW(VectorIndex):
                 HNSW(distance_function=self.metric, M=self.M,
                      ef_construction=self.ef_construction,
                      ef_search=self.ef_search, seed=self.seed + j,
-                     use_bulk_build=False, n_shards=1)
+                     use_bulk_build=False, n_shards=1, dtype=self.dtype,
+                     rerank_factor=self.rerank_factor)
                 for j in range(self.n_shards)]
-        for _, key, vec in rows:
-            self._insert_impl(key, vec)
+        for _, key, vec, enc_row, scale in rows:
+            self._insert_canonical(key, vec, enc_row, scale)
         if self.n_shards > 1:
             if rec_shards == 1:
-                self._seq = {key: seq for seq, key, _ in rows}
+                self._seq = {key: seq for seq, key, *_ in rows}
                 self._next_seq = int(meta["n"])
             else:
                 self._seq = {k: int(v) for k, v in meta["seq"]}

@@ -29,6 +29,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.codec import (check_codec_arrays as _check_codec_arrays,
+                              effective_rerank, get_codec, rerank_exact)
 from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
 from repro.core.sharded import (SHARD_AXIS, ShardedRows, hierarchical_topk,
@@ -39,17 +41,22 @@ from repro.kernels import ops
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class IVFIndex:
-    vectors: jax.Array        # [N, D] (normalised if cosine)
-    centroids: jax.Array      # [nlist, D]
+    vectors: jax.Array        # [N, D] (normalised if cosine); may be
+                              # codec-encoded (DESIGN.md §9)
+    centroids: jax.Array      # [nlist, D] always fp32 (trained state)
     lists: jax.Array          # [nlist, cap] int32, -1 padded
     metric: str
+    scales: jax.Array | None = None   # [N] per-row decode scales (int8)
 
     def tree_flatten(self):
-        return (self.vectors, self.centroids, self.lists), (self.metric,)
+        return ((self.vectors, self.centroids, self.lists, self.scales),
+                (self.metric,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, metric=aux[0])
+        vectors, centroids, lists, scales = children
+        return cls(vectors=vectors, centroids=centroids, lists=lists,
+                   metric=aux[0], scales=scales)
 
     @property
     def n(self):
@@ -109,7 +116,8 @@ def _search(idx: IVFIndex, q: jax.Array, k: int, nprobe: int):
     cand = jnp.take(idx.lists, probe, axis=0).reshape(b, nprobe * cap)
     valid = cand >= 0
     ids = jnp.clip(cand, 0, idx.n - 1)
-    d = ops.gather_distance(idx.vectors, q, ids, metric=idx.metric)
+    d = ops.gather_distance(idx.vectors, q, ids, metric=idx.metric,
+                            scales=idx.scales)
     d = jnp.where(valid, d, jnp.float32(3e38))
     neg, j = jax.lax.top_k(-d, k)
     out_ids = jnp.take_along_axis(ids, j, axis=1)
@@ -140,16 +148,19 @@ def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
 # sharded probe: per-shard lists, global centroids, hierarchical merge
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=64)
-def _ivf_fanout_fn(mesh, k: int, nprobe: int, metric: str):
+def _ivf_fanout_fn(mesh, k: int, nprobe: int, metric: str,
+                   has_scales: bool = False):
     """Compiled sharded IVF search. blocks [S,R,D] + lists [S,nlist,cap] +
-    gids [S,R] sharded over ``"shard"``; centroids [nlist,D] and queries
-    [B,D] replicated -> (dists [B,k], global row ids [B,k]) replicated.
-    Every shard probes the SAME clusters (the coarse score is replicated
-    arithmetic on replicated inputs), gathers only its local members, and
-    the per-shard top-k merges through the hierarchical tree."""
+    gids [S,R] (and, for a scaled codec, scales [S,R]) sharded over
+    ``"shard"``; centroids [nlist,D] and queries [B,D] replicated ->
+    (dists [B,k], global row ids [B,k]) replicated. Every shard probes
+    the SAME clusters (the coarse score is replicated arithmetic on
+    replicated fp32 centroids), gathers only its local members — decoding
+    codec rows inside the fused kernel (DESIGN.md §9) — and the per-shard
+    top-k merges through the hierarchical tree."""
     INF = jnp.float32(3e38)
 
-    def local(blk, lists, gid, cent, q):
+    def local(blk, lists, gid, cent, q, scl=None):
         blk, lists, gid = blk[0], lists[0], gid[0]
         b = q.shape[0]
         nlist, cap = lists.shape
@@ -161,13 +172,25 @@ def _ivf_fanout_fn(mesh, k: int, nprobe: int, metric: str):
         cand = jnp.take(lists, probe, axis=0).reshape(b, nprobe * cap)
         valid = cand >= 0
         slots = jnp.clip(cand, 0, r - 1)
-        d = ops.gather_distance(blk, q, slots, metric=metric)
+        d = ops.gather_distance(blk, q, slots, metric=metric,
+                                scales=None if scl is None else scl[0])
         d = jnp.where(valid, d, INF)
         g = jnp.take(gid, slots)
         d, g = trim_merge_width(d, g, k, INF)
         g = jnp.where(d >= INF, -1, g)
         return hierarchical_topk(d, g, k, (SHARD_AXIS,), tie_break_ids=True)
 
+    if has_scales:
+        fn = shard_map(
+            lambda blk, lists, gid, scl, cent, q:
+                local(blk, lists, gid, cent, q, scl),
+            mesh=mesh,
+            in_specs=(P(SHARD_AXIS, None, None), P(SHARD_AXIS, None, None),
+                      P(SHARD_AXIS, None), P(SHARD_AXIS, None),
+                      P(None, None), P(None, None)),
+            out_specs=(P(None, None), P(None, None)),
+            check_rep=False)
+        return jax.jit(fn)
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(SHARD_AXIS, None, None),
                              P(SHARD_AXIS, None, None), P(SHARD_AXIS, None),
@@ -203,7 +226,8 @@ class IVFVectorIndex(VectorIndex):
 
     def __init__(self, *, metric: str = "cosine", dim: int | None = None,
                  nlist: int = 64, nprobe: int = 8, iters: int = 8,
-                 seed: int = 0, n_shards: int = 1):
+                 seed: int = 0, n_shards: int = 1, dtype: str = "fp32",
+                 rerank_factor: int | None = None):
         if metric not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown metric {metric!r}")
         self.metric = metric
@@ -213,10 +237,16 @@ class IVFVectorIndex(VectorIndex):
         self.iters = iters
         self.seed = seed
         self.n_shards = int(n_shards)
+        self.dtype = str(dtype)
+        self.rerank_factor = rerank_factor
+        self._codec = get_codec(self.dtype)
         # rows are normalised at INSERT time for cosine (classic IVF add
-        # semantics), so the substrate packs them raw
+        # semantics), so the substrate packs them raw — and under a lossy
+        # codec quantizes the already-normalized rows once at ingest
+        # (DESIGN.md §9)
         self._rows = ShardedRows(n_shards=self.n_shards, metric=metric,
-                                 dim=dim, normalize_on_pack=False)
+                                 dim=dim, normalize_on_pack=False,
+                                 codec=self._codec)
         self._centroids: np.ndarray | None = None   # trained lazily
         self._idx: IVFIndex | None = None           # S==1 packed device index
         self._live_rows: np.ndarray | None = None   # S==1 pack order
@@ -306,9 +336,17 @@ class IVFVectorIndex(VectorIndex):
         for i, a in enumerate(assign):
             lists[a, cursor[a]] = i
             cursor[a] += 1
-        self._idx = IVFIndex(vectors=jnp.asarray(self._rows.vectors[live]),
-                             centroids=jnp.asarray(cent),
-                             lists=jnp.asarray(lists), metric=self.metric)
+        if self._codec.lossy:
+            # device payload = canonical encoded rows; the fine distance
+            # decodes in-kernel (asymmetric, DESIGN.md §9)
+            vecs = jnp.asarray(self._rows.encoded[live])
+            scl = (jnp.asarray(self._rows.scales[live])
+                   if self._rows.scales is not None else None)
+        else:
+            vecs, scl = jnp.asarray(self._rows.vectors[live]), None
+        self._idx = IVFIndex(vectors=vecs, centroids=jnp.asarray(cent),
+                             lists=jnp.asarray(lists), metric=self.metric,
+                             scales=scl)
         return self._idx
 
     def _pack_sharded(self):
@@ -319,7 +357,7 @@ class IVFVectorIndex(VectorIndex):
         live = np.flatnonzero(self._rows.alive)
         if live.size == 0:
             raise ValueError("index is empty")
-        mesh, blocks, gids, _slack = self._rows.pack()
+        mesh, blocks, gids, scl, _slack = self._rows.pack()
         cent, assign, nlist = self._coarse(live)
         s_lists: list[list[list[int]]] = [
             [[] for _ in range(nlist)] for _ in range(self.n_shards)]
@@ -338,7 +376,7 @@ class IVFVectorIndex(VectorIndex):
                 lists[s, c, :len(m)] = m
         lj = jax.device_put(jnp.asarray(lists),
                             NamedSharding(mesh, P(SHARD_AXIS, None, None)))
-        self._spack = (mesh, blocks, lj, gids, jnp.asarray(cent),
+        self._spack = (mesh, blocks, lj, gids, scl, jnp.asarray(cent),
                        nlist, cap_global, int(live.size))
         return self._spack
 
@@ -347,22 +385,34 @@ class IVFVectorIndex(VectorIndex):
         """One fixed-shape probed search for the whole [B, D] batch —
         single-dispatch sharded fan-out when ``n_shards > 1``.
 
+        Under a lossy codec (DESIGN.md §9) the probed candidates are
+        scored asymmetrically (fp32 query vs encoded rows, decode fused
+        in-kernel), the search over-fetches ``k·rerank_factor``, and the
+        survivors rerank exactly in fp32 from the canonical host rows.
+
         Extra search kwargs from other backends (e.g. hnsw's ``ef``) are
         accepted and ignored so the serving layer can pass one knob set
         through any backend."""
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"query_batch expects [B, D], got {q.shape}")
+        rf = effective_rerank(self._codec, self.rerank_factor)
+        from repro.core.flat import _pad_results
         if self.n_shards == 1:
             idx = self._pack()
-            ids, d = search_ivf(idx, q, k=min(k, idx.n),
+            ids, d = search_ivf(idx, q, k=min(k * rf, idx.n),
                                 nprobe=nprobe or self.nprobe)
             ids, d = np.asarray(ids), np.asarray(d)
-            from repro.core.flat import _pad_results
+            if rf > 1:
+                gids = np.where(ids >= 0, self._live_rows[ids], -1)
+                d, gids = self._rows.rerank_topk(q, gids, k)
+                return _pad_results(
+                    [[self._rows.key_of_row(int(r)) if r >= 0 else None
+                      for r in row] for row in gids], d, k)
             return _pad_results(
                 [[self._rows.key_of_row(int(self._live_rows[j]))
                   if j >= 0 else None for j in row] for row in ids], d, k)
-        mesh, blocks, lists, gids, cent, nlist, cap_global, n_live = \
+        mesh, blocks, lists, gids, scl, cent, nlist, cap_global, n_live = \
             self._pack_sharded()
         qj = jnp.asarray(q)
         if self.metric == "cosine":
@@ -370,11 +420,14 @@ class IVFVectorIndex(VectorIndex):
                 jnp.linalg.norm(qj, axis=-1, keepdims=True), 1e-12)
         npr = min(nprobe or self.nprobe, nlist)
         # same candidate-capacity clamp the 1-shard path applies
-        k_eff = min(min(k, n_live), npr * cap_global)
-        fn = _ivf_fanout_fn(mesh, k_eff, npr, self.metric)
-        d, g = fn(blocks, lists, gids, cent, qj)
+        k_eff = min(min(k * rf, n_live), npr * cap_global)
+        fn = _ivf_fanout_fn(mesh, k_eff, npr, self.metric,
+                            has_scales=scl is not None)
+        d, g = (fn(blocks, lists, gids, scl, cent, qj) if scl is not None
+                else fn(blocks, lists, gids, cent, qj))
         d, g = np.asarray(d), np.asarray(g)
-        from repro.core.flat import _pad_results
+        if rf > 1:
+            d, g = self._rows.rerank_topk(q, g, k)
         return _pad_results(
             [[self._rows.key_of_row(int(r)) if r >= 0 else None
               for r in row] for row in g], d, k)
@@ -384,7 +437,7 @@ class IVFVectorIndex(VectorIndex):
         if self.n_shards == 1:
             idx = self._pack()
             return self.query(query, k, nprobe=idx.centroids.shape[0])
-        nlist = self._pack_sharded()[5]
+        nlist = self._pack_sharded()[6]
         return self.query(query, k, nprobe=nlist)
 
     # --------------------------------------------------------- persistence
@@ -394,21 +447,36 @@ class IVFVectorIndex(VectorIndex):
     def config_dict(self) -> dict:
         return {"metric": self.metric, "dim": self.dim, "nlist": self.nlist,
                 "nprobe": self.nprobe, "iters": self.iters,
-                "seed": self.seed, "n_shards": self.n_shards}
+                "seed": self.seed, "n_shards": self.n_shards,
+                "dtype": self.dtype, "rerank_factor": self.rerank_factor}
 
     def state_dict(self) -> tuple[dict, dict]:
         cent = (self._centroids if self._centroids is not None
                 else np.zeros((0, self.dim or 0), np.float32))
-        arrays = {"vectors": self._rows.vectors, "alive": self._rows.alive,
-                  "centroids": cent}
+        if self._codec.lossy:
+            arrays = {"vectors_enc":
+                      self._codec.to_storage(self._rows.encoded),
+                      "alive": self._rows.alive, "centroids": cent}
+            if self._rows.scales is not None:
+                arrays["scales"] = self._rows.scales
+        else:
+            arrays = {"vectors": self._rows.vectors,
+                      "alive": self._rows.alive, "centroids": cent}
         meta = {"keys": list(self._rows.key_list), "epoch": self._epoch,
                 "has_centroids": self._centroids is not None}
         return arrays, meta
 
     def restore_state(self, arrays: dict, meta: dict) -> None:
-        self._rows.restore(np.asarray(arrays["vectors"], np.float32),
-                           list(meta["keys"]),
-                           np.asarray(arrays["alive"], bool))
+        _check_codec_arrays(self._codec, arrays, self.kind)
+        if self._codec.lossy:
+            self._rows.restore_encoded(arrays["vectors_enc"],
+                                       arrays.get("scales"),
+                                       list(meta["keys"]),
+                                       np.asarray(arrays["alive"], bool))
+        else:
+            self._rows.restore(np.asarray(arrays["vectors"], np.float32),
+                               list(meta["keys"]),
+                               np.asarray(arrays["alive"], bool))
         if self._rows.dim:
             self.dim = self._rows.dim
         self._centroids = (np.asarray(arrays["centroids"], np.float32)

@@ -43,6 +43,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.codec import VectorCodec, get_codec, rerank_exact
 from repro.core.hnsw_build import normalize_rows
 from repro.distributed.collectives import hierarchical_topk
 from repro.kernels import ops
@@ -109,28 +110,42 @@ def trim_merge_width(d: jax.Array, ids: jax.Array, k: int, inf
 
 
 @functools.lru_cache(maxsize=64)
-def _fanout_topk_fn(mesh: Mesh, k: int, slack: int, metric: str):
+def _fanout_topk_fn(mesh: Mesh, k: int, slack: int, metric: str,
+                    has_scales: bool = False):
     """Compiled sharded exact top-k.
 
     blocks [S, R, D] + gids [S, R] (sharded over ``"shard"``), queries
     [B, D] (replicated) -> (dists [B, k], global ids [B, k]) replicated.
-    Slots with gid < 0 (free slots / block padding) must not reach the
-    merge, but the fused ``flat_topk`` kernel cannot mask mid-kernel —
-    so each shard over-fetches ``k + slack`` candidates (slack = the
-    pack-time bound on dead slots per shard), masks by gid, and
-    re-selects k. Missing slots come back as (INF, -1).
+    Blocks may be codec-encoded (DESIGN.md §9); with ``has_scales`` a
+    sharded [S, R] scale table rides along and the per-row decode fuses
+    into the distance kernel. Slots with gid < 0 (free slots / block
+    padding) must not reach the merge, but the fused ``flat_topk``
+    kernel cannot mask mid-kernel — so each shard over-fetches
+    ``k + slack`` candidates (slack = the pack-time bound on dead slots
+    per shard), masks by gid, and re-selects k. Missing slots come back
+    as (INF, -1).
     """
-    def local(blk, gid, q):
+    def local(blk, gid, q, scl=None):
         blk, gid = blk[0], gid[0]
         r = blk.shape[0]
         kk = min(k + slack, r)
-        d, i = ops.flat_topk(blk, q, kk, metric=metric)
+        d, i = ops.flat_topk(blk, q, kk, metric=metric,
+                             scales=None if scl is None else scl[0])
         g = jnp.take(gid, i)
         d = jnp.where(g >= 0, d, jnp.float32(INF))
         d, g = trim_merge_width(d, g, k, jnp.float32(INF))
         g = jnp.where(d >= jnp.float32(INF), -1, g)
         return hierarchical_topk(d, g, k, (SHARD_AXIS,), tie_break_ids=True)
 
+    if has_scales:
+        fn = shard_map(lambda blk, gid, scl, q: local(blk, gid, q, scl),
+                       mesh=mesh,
+                       in_specs=(P(SHARD_AXIS, None, None),
+                                 P(SHARD_AXIS, None), P(SHARD_AXIS, None),
+                                 P(None, None)),
+                       out_specs=(P(None, None), P(None, None)),
+                       check_rep=False)
+        return jax.jit(fn)
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(SHARD_AXIS, None, None), P(SHARD_AXIS, None),
                              P(None, None)),
@@ -148,14 +163,20 @@ def _quantize_slack(slack: int) -> int:
     return 1 << (slack - 1).bit_length()
 
 
-def place_blocks(blocks: np.ndarray, gids: np.ndarray, mesh: Mesh):
-    """Upload one [S, R, D] block array + its [S, R] gid map, row blocks
-    resident on their owning shard's device."""
+def place_blocks(blocks: np.ndarray, gids: np.ndarray, mesh: Mesh,
+                 scales: np.ndarray | None = None):
+    """Upload one [S, R, D] block array + its [S, R] gid map (and, for a
+    scaled codec, the [S, R] scale table), row blocks resident on their
+    owning shard's device."""
     b = jax.device_put(jnp.asarray(blocks),
                        NamedSharding(mesh, P(SHARD_AXIS, None, None)))
     g = jax.device_put(jnp.asarray(gids),
                        NamedSharding(mesh, P(SHARD_AXIS, None)))
-    return b, g
+    if scales is None:
+        return b, g
+    s = jax.device_put(jnp.asarray(scales),
+                       NamedSharding(mesh, P(SHARD_AXIS, None)))
+    return b, g, s
 
 
 def fanout_exact_topk(groups, queries, k: int, *, metric: str,
@@ -204,17 +225,30 @@ class ShardedRows:
     """
 
     def __init__(self, *, n_shards: int = 1, metric: str = "cosine",
-                 dim: int | None = None, normalize_on_pack: bool = False):
+                 dim: int | None = None, normalize_on_pack: bool = False,
+                 codec: VectorCodec | str | None = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
         self.metric = metric
         self.dim = dim
         # metric-appropriate normalization at pack time (flat semantics);
-        # IVF normalizes at insert instead and packs raw
+        # IVF normalizes at insert instead and packs raw. Under a LOSSY
+        # codec the normalization moves to ingest (rows must be in final
+        # form BEFORE they are quantized once, DESIGN.md §9) and pack
+        # uploads the canonical encoded rows untouched.
         self.normalize_on_pack = normalize_on_pack
-        # canonical
+        self.codec = (codec if isinstance(codec, VectorCodec)
+                      else get_codec(codec or "fp32"))
+        # canonical: fp32 decode (insertion-ordered; what reranking,
+        # training, and the exact phases read) + for lossy codecs the
+        # encoded rows and per-row scales (what devices and snapshots
+        # hold — encoded ONCE at ingest, never re-derived)
         self._vecs = np.zeros((0, dim or 0), np.float32)
+        self._enc = (np.zeros((0, dim or 0), self.codec.enc_dtype)
+                     if self.codec.lossy else None)
+        self._scales = (np.zeros(0, np.float32)
+                        if self.codec.uses_scales else None)
         self._keys: list[str] = []
         self._key2row: dict[str, int] = {}
         self._alive = np.zeros(0, bool)
@@ -224,7 +258,7 @@ class ShardedRows:
         self._slots: list[list[int]] = [[] for _ in range(n_shards)]
         self._free: list[list[int]] = [[] for _ in range(n_shards)]
         # device (lazy)
-        self._device = None          # S>1: (mesh, blocks, gids, slack)
+        self._device = None          # S>1: (mesh, blocks, gids, scl, slack)
         self._flat = None            # S==1: FlatIndex over live rows
         self._live_rows: np.ndarray | None = None
 
@@ -232,6 +266,16 @@ class ShardedRows:
     @property
     def vectors(self) -> np.ndarray:
         return self._vecs
+
+    @property
+    def encoded(self) -> np.ndarray | None:
+        """Canonical codec-encoded rows [T, D] (None for fp32)."""
+        return self._enc
+
+    @property
+    def scales(self) -> np.ndarray | None:
+        """Canonical per-row decode scales [T] (int8 codec only)."""
+        return self._scales
 
     @property
     def alive(self) -> np.ndarray:
@@ -282,6 +326,25 @@ class ShardedRows:
         if self.dim is None:
             self.dim = d
             self._vecs = np.zeros((0, d), np.float32)
+            if self._enc is not None:
+                self._enc = np.zeros((0, d), self.codec.enc_dtype)
+
+    def _ingest(self, vecs: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray | None, np.ndarray | None]:
+        """Raw fp32 rows -> (canonical fp32, encoded, scales).
+
+        Lossy codecs quantize HERE, once, after any metric normalization
+        (DESIGN.md §9): the encoded rows become canonical and the fp32
+        side is their exact decode, so re-encoding never happens and
+        snapshot round-trips are bit-stable. fp32 passes through
+        untouched (the historical path)."""
+        vecs = np.asarray(vecs, np.float32)
+        if not self.codec.lossy:
+            return vecs, None, None
+        if self.normalize_on_pack and self.metric == "cosine":
+            vecs = normalize_rows(vecs)
+        enc, scales = self.codec.encode(vecs)
+        return self.codec.decode(enc, scales), enc, scales
 
     def _claim_slot(self, shard: int, row: int) -> int:
         free = self._free[shard]
@@ -298,6 +361,14 @@ class ShardedRows:
         s, slot = int(self._row_shard[row]), int(self._row_slot[row])
         self._slots[s][slot] = -1
         self._free[s].append(slot)
+
+    def _append_enc(self, enc: np.ndarray | None,
+                    scales: np.ndarray | None) -> None:
+        if self._enc is not None:
+            self._enc = np.concatenate([self._enc, enc])
+        if self._scales is not None:
+            self._scales = np.concatenate(
+                [self._scales, np.asarray(scales, np.float32)])
 
     def _append_row(self, key: str, vec: np.ndarray) -> int:
         row = len(self._keys)
@@ -316,15 +387,18 @@ class ShardedRows:
     def upsert(self, key: str, vec: np.ndarray) -> None:
         vec = np.asarray(vec, np.float32).reshape(-1)
         self._ensure_dim(vec.shape[0])
+        vec, enc, scales = self._ingest(vec[None])
         old = self._key2row.pop(key, None)
         if old is not None:
             self._release_row(old)
-        self._append_row(key, vec)
+        self._append_row(key, vec[0])
+        self._append_enc(enc, scales)
         self._invalidate()
 
     def upsert_many(self, keys: list[str], vecs: np.ndarray) -> None:
         vecs = np.asarray(vecs, np.float32)
         self._ensure_dim(vecs.shape[1])
+        vecs, enc, scales = self._ingest(vecs)
         # pop as we release: a pre-existing key repeated WITHIN the batch
         # must free its old slot exactly once (a double release would
         # push the slot onto the free stack twice and hand it to two rows)
@@ -335,6 +409,7 @@ class ShardedRows:
         base = len(self._keys)
         n = len(keys)
         self._vecs = np.concatenate([self._vecs, vecs])
+        self._append_enc(enc, scales)
         self._keys.extend(keys)
         self._alive = np.concatenate([self._alive, np.ones(n, bool)])
         shards = np.zeros(n, np.int32)
@@ -358,18 +433,33 @@ class ShardedRows:
         """Physically drop tombstoned rows: canonical arrays re-pack over
         live rows and the per-shard slot tables are rebuilt dense — the
         complement of the store layer's secure-delete page rewrite
-        (DESIGN.md §7): after this, a deleted vector's bytes exist in no
-        host array and in no shard's device block."""
+        (DESIGN.md §7): after this, a deleted vector's bytes — the fp32
+        decode AND the codec-encoded bytes + scale (DESIGN.md §9) —
+        exist in no host array and in no shard's device block."""
         live = np.flatnonzero(self._alive)
         vecs = np.ascontiguousarray(self._vecs[live])
         keys = [self._keys[i] for i in live]
-        self._reset_layout(vecs, keys, np.ones(live.size, bool))
+        enc = (np.ascontiguousarray(self._enc[live])
+               if self._enc is not None else None)
+        scales = (np.ascontiguousarray(self._scales[live])
+                  if self._scales is not None else None)
+        self._reset_layout(vecs, keys, np.ones(live.size, bool),
+                           enc=enc, scales=scales)
 
     def _reset_layout(self, vecs: np.ndarray, keys: list[str],
-                      alive: np.ndarray) -> None:
+                      alive: np.ndarray, enc: np.ndarray | None = None,
+                      scales: np.ndarray | None = None) -> None:
         """Adopt canonical arrays and re-derive placement from scratch
         (compaction, restore, resharding all land here)."""
         self._vecs = np.asarray(vecs, np.float32)
+        if self._enc is not None:
+            if enc is None:
+                raise ValueError(
+                    f"{self.codec.name} rows need their encoded arrays; "
+                    "got fp32-only state (cross-dtype restore?)")
+            self._enc = np.asarray(enc, self.codec.enc_dtype)
+        if self._scales is not None:
+            self._scales = np.asarray(scales, np.float32)
         if self._vecs.shape[1]:
             self.dim = int(self._vecs.shape[1])
         self._keys = list(keys)
@@ -393,7 +483,21 @@ class ShardedRows:
                 alive: np.ndarray) -> None:
         """Inverse of the canonical accessors: placement is re-derived,
         which is why a snapshot reshards freely (DESIGN.md §8)."""
+        if self.codec.lossy:
+            raise ValueError(
+                f"{self.codec.name} rows restore from encoded state "
+                "(restore_encoded); got fp32-only state — the store was "
+                "written by a different storage dtype")
         self._reset_layout(vecs, keys, alive)
+
+    def restore_encoded(self, enc: np.ndarray, scales: np.ndarray | None,
+                        keys: list[str], alive: np.ndarray) -> None:
+        """Adopt snapshotted encoded rows (+ scales) as canonical and
+        re-derive the fp32 side by decoding — the encoded array is never
+        re-derived, so restore is bit-for-bit (DESIGN.md §9)."""
+        enc = self.codec.from_storage(enc)
+        self._reset_layout(self.codec.decode(enc, scales), keys, alive,
+                           enc=enc, scales=scales)
 
     # --------------------------------------------------------------- pack
     def _maybe_relayout(self) -> None:
@@ -407,28 +511,45 @@ class ShardedRows:
     def pack(self):
         """(Re)build the device placement over live rows.
 
-        S == 1 -> a plain ``FlatIndex`` (bit-for-bit the pre-shard path).
-        S > 1  -> (mesh, blocks [S,R,D], gids [S,R], slack).
+        S == 1 -> a ``FlatIndex`` (bit-for-bit the pre-shard path for
+                  fp32; encoded rows + scale column for lossy codecs).
+        S > 1  -> (mesh, blocks [S,R,D], gids [S,R], scales [S,R]|None,
+                  slack). Blocks hold the codec-encoded rows, so device
+                  bytes shrink with the codec (DESIGN.md §9).
         """
         live = np.flatnonzero(self._alive)
         if live.size == 0:
             raise ValueError("index is empty")
+        lossy = self.codec.lossy
         if self.n_shards == 1:
             if self._flat is None:
                 from repro.core.flat import FlatIndex
                 self._live_rows = live
-                v = self._vecs[live]
-                self._flat = (FlatIndex.build(v, metric=self.metric)
-                              if self.normalize_on_pack else
-                              FlatIndex(vectors=jnp.asarray(v),
-                                        metric=self.metric))
+                if lossy:
+                    # rows were normalized + encoded at ingest; upload
+                    # the canonical encoded bytes as-is
+                    self._flat = FlatIndex(
+                        vectors=jnp.asarray(self._enc[live]),
+                        metric=self.metric,
+                        scales=(jnp.asarray(self._scales[live])
+                                if self._scales is not None else None))
+                else:
+                    v = self._vecs[live]
+                    self._flat = (FlatIndex.build(v, metric=self.metric)
+                                  if self.normalize_on_pack else
+                                  FlatIndex(vectors=jnp.asarray(v),
+                                            metric=self.metric))
             return self._flat
         if self._device is None:
             self._maybe_relayout()
             mesh = shard_mesh(self.n_shards)
             r = max(max(len(s) for s in self._slots), 1)
-            blocks = np.zeros((self.n_shards, r, self.dim or 1), np.float32)
+            rows_src = self._enc if lossy else self._vecs
+            blocks = np.zeros((self.n_shards, r, self.dim or 1),
+                              rows_src.dtype)
             gids = np.full((self.n_shards, r), -1, np.int32)
+            scl = (np.zeros((self.n_shards, r), np.float32)
+                   if self._scales is not None else None)
             slack = 0
             for s in range(self.n_shards):
                 dead = r - (len(self._slots[s]) - len(self._free[s]))
@@ -436,20 +557,28 @@ class ShardedRows:
                 table = np.asarray(self._slots[s], np.int64)
                 occ = np.flatnonzero(table >= 0)     # occupied slots only
                 if occ.size:
-                    blocks[s, occ] = self._vecs[table[occ]]
+                    blocks[s, occ] = rows_src[table[occ]]
                     gids[s, occ] = table[occ]
-            if self.normalize_on_pack and self.metric == "cosine":
+                    if scl is not None:
+                        scl[s, occ] = self._scales[table[occ]]
+            if not lossy and self.normalize_on_pack \
+                    and self.metric == "cosine":
                 # row-wise, so identical bits to normalizing each shard's
                 # rows separately; free slots stay zero (norm clamped)
                 blocks = normalize_rows(blocks)
-            bl, gi = place_blocks(blocks, gids, mesh)
-            self._device = (mesh, bl, gi, _quantize_slack(slack))
+            if scl is None:
+                bl, gi = place_blocks(blocks, gids, mesh)
+                sc = None
+            else:
+                bl, gi, sc = place_blocks(blocks, gids, mesh, scl)
+            self._device = (mesh, bl, gi, sc, _quantize_slack(slack))
         return self._device
 
     # -------------------------------------------------------------- search
     def topk(self, queries: np.ndarray, k: int
              ) -> tuple[np.ndarray, np.ndarray]:
-        """Exact top-k over live rows -> (dists, global row ids).
+        """Exact top-k over live rows (asymmetric under a lossy codec:
+        fp32 query vs encoded rows) -> (dists, global row ids).
 
         S == 1 returns ``min(k, live)`` columns (exactly the historical
         single-device behaviour — callers pad); S > 1 always returns k
@@ -461,11 +590,35 @@ class ShardedRows:
             d, i = flat.query(q, min(k, flat.n))
             d, i = np.asarray(d), np.asarray(i)
             return d, self._live_rows[i]
-        mesh, blocks, gids, slack = self.pack()
+        mesh, blocks, gids, scl, slack = self.pack()
         qj = jnp.asarray(q)
         if self.metric == "cosine" and self.normalize_on_pack:
             qj = qj / jnp.maximum(
                 jnp.linalg.norm(qj, axis=-1, keepdims=True), 1e-12)
-        fn = _fanout_topk_fn(mesh, k, slack, self.metric)
-        d, g = fn(blocks, gids, qj)
+        fn = _fanout_topk_fn(mesh, k, slack, self.metric,
+                             has_scales=scl is not None)
+        d, g = (fn(blocks, gids, scl, qj) if scl is not None
+                else fn(blocks, gids, qj))
         return np.asarray(d), np.asarray(g)
+
+    def rerank_topk(self, queries: np.ndarray, gids: np.ndarray, k: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact fp32 re-scoring of over-fetched candidates against the
+        canonical host rows (DESIGN.md §9): the second half of the lossy
+        search contract (asymmetric first pass over-fetches
+        ``k·rerank_factor``, this picks the true best k)."""
+        return rerank_exact(self._vecs, queries, gids, k,
+                            metric=self.metric)
+
+    def device_block_bytes(self) -> int:
+        """Bytes the packed device representation holds per the current
+        live set (blocks + gid map + scale table) — the codec's device
+        footprint (benchmarks/bench_memory.py)."""
+        packed = self.pack()
+        if self.n_shards == 1:
+            total = packed.vectors.nbytes
+            if packed.scales is not None:
+                total += packed.scales.nbytes
+            return total
+        _, bl, gi, sc, _ = packed
+        return bl.nbytes + gi.nbytes + (sc.nbytes if sc is not None else 0)

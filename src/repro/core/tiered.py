@@ -53,17 +53,48 @@ class TieredVectorStore:
     current-layer graph neighbors (the paper's policy). Without neighbor
     info it falls back to fetching the next ``p`` sequential rows (the
     Dexie-style batched read the paper compares against).
+
+    ``codec`` (DESIGN.md §9): a lossy codec makes the SLOW tier hold the
+    encoded rows (+ per-row scales) — the bytes-constrained tier the
+    paper models — and ``read`` decodes on admission, so the fast tier
+    serves fp32 rows to the distance math. Because the prefetch budget is
+    in BYTES, an int8 slow tier prefetches ~4x more neighbors per
+    transaction — exactly the paper's bytes-per-transaction economics.
     """
 
     def __init__(self, vectors: np.ndarray, *, cache_rows: int,
-                 prefetch_p: int | None = None):
-        self.slow = vectors
+                 prefetch_p: int | None = None, codec=None):
+        self.codec = codec if (codec is not None and codec.lossy) else None
+        if self.codec is not None:
+            self.slow, self._slow_scales = self.codec.encode(
+                np.asarray(vectors, np.float32))
+            itemsize = self.codec.enc_dtype.itemsize
+        else:
+            self.slow = vectors
+            self._slow_scales = None
+            itemsize = vectors.itemsize
         self.dim = vectors.shape[1]
-        self.p = prefetch_p or auto_prefetch_p(self.dim, vectors.itemsize)
+        self.p = prefetch_p or auto_prefetch_p(self.dim, itemsize)
         self.cache_rows = max(cache_rows, self.p)
         self.cache: "collections.OrderedDict[int, np.ndarray]" = \
             collections.OrderedDict()
         self.stats = TierStats()
+
+    @property
+    def slow_tier_bytes(self) -> int:
+        """Bytes the slow tier actually holds (encoded under a codec)."""
+        total = self.slow.nbytes
+        if self._slow_scales is not None:
+            total += self._slow_scales.nbytes
+        return total
+
+    def _slow_row(self, i: int) -> np.ndarray:
+        if self.codec is None:
+            return self.slow[i]
+        return self.codec.decode(self.slow[i][None],
+                                 self._slow_scales[i:i + 1]
+                                 if self._slow_scales is not None
+                                 else None)[0]
 
     def _admit(self, row_id: int, row: np.ndarray):
         if row_id in self.cache:
@@ -79,12 +110,15 @@ class TieredVectorStore:
         self.stats.transactions += 1
         self.stats.rows_fetched += len(ids)
         for i in ids:
-            self._admit(i, self.slow[i])
+            self._admit(i, self._slow_row(i))
 
     def read(self, ids, neighbor_fn=None) -> np.ndarray:
         """Fetch rows by id; ``neighbor_fn(id) -> iterable`` gives the
-        current-layer graph neighbors used for prefetch."""
-        out = np.empty((len(ids), self.dim), self.slow.dtype)
+        current-layer graph neighbors used for prefetch. Rows come back
+        fp32-decoded when the slow tier is codec-encoded."""
+        out = np.empty((len(ids), self.dim),
+                       np.float32 if self.codec is not None
+                       else self.slow.dtype)
         for j, i in enumerate(ids):
             i = int(i)
             if i in self.cache:
@@ -144,14 +178,20 @@ class TieredIndex(VectorIndex):
                  ef_construction: int = 200, ef_search: int = 64,
                  cache_rows: int = 1024, prefetch_p: int | None = None,
                  seed: int = 0, use_bulk_build: bool = False,
-                 n_shards: int = 1):
+                 n_shards: int = 1, dtype: str = "fp32",
+                 rerank_factor: int | None = None):
+        from repro.core.codec import get_codec
         from repro.core.interface import HNSW   # lazy: avoid import cycle
         self.n_shards = int(n_shards)
+        self.dtype = str(dtype)
+        self.rerank_factor = rerank_factor
+        self._codec = get_codec(self.dtype)
         self.inner = HNSW(distance_function=metric, M=M,
                           ef_construction=ef_construction,
                           ef_search=ef_search, seed=seed,
                           use_bulk_build=use_bulk_build,
-                          n_shards=self.n_shards)
+                          n_shards=self.n_shards, dtype=self.dtype,
+                          rerank_factor=rerank_factor)
         self.metric = metric
         self.ef_search = ef_search
         self.cache_rows = cache_rows
@@ -204,7 +244,8 @@ class TieredIndex(VectorIndex):
             self._g = self.inner._builder.graph()
             self._tier_store = TieredVectorStore(self._g.vectors,
                                                  cache_rows=self.cache_rows,
-                                                 prefetch_p=self.prefetch_p)
+                                                 prefetch_p=self.prefetch_p,
+                                                 codec=self._codec)
         return self._g, self._tier_store
 
     def _tiers_sharded(self) -> list:
@@ -219,7 +260,7 @@ class TieredIndex(VectorIndex):
                 g = child._builder.graph()
                 out.append((g, TieredVectorStore(
                     g.vectors, cache_rows=self.cache_rows,
-                    prefetch_p=self.prefetch_p), child))
+                    prefetch_p=self.prefetch_p, codec=self._codec), child))
             if not out:
                 raise ValueError("index is empty")
             self._tier_shards = out
@@ -294,7 +335,8 @@ class TieredIndex(VectorIndex):
                 "prefetch_p": self.prefetch_p,
                 "seed": self.inner.seed,
                 "use_bulk_build": self.inner.use_bulk_build,
-                "n_shards": self.n_shards}
+                "n_shards": self.n_shards, "dtype": self.dtype,
+                "rerank_factor": self.rerank_factor}
 
     def state_dict(self) -> tuple[dict, dict]:
         """The durable state IS the inner HNSW's (graph + tombstones +

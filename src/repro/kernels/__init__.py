@@ -1,3 +1,25 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from __future__ import annotations
+
+import os
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Platform-aware default for the Pallas ``interpret`` flag.
+
+    ``None`` (the default in the retrieval kernels) resolves to
+    "interpret only off-TPU": a TPU process compiles the real kernels
+    without every caller having to pass ``interpret=False``, while CPU
+    runs keep executing the same kernels under the interpreter. Override
+    per-call with an explicit bool, or process-wide with
+    ``REPRO_PALLAS_INTERPRET=1|0``.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "")
+    import jax
+    return jax.default_backend() != "tpu"

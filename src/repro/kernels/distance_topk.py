@@ -12,26 +12,39 @@ split-K top-k:
     partials.
 
 MXU alignment: D and BN should be multiples of 128 for peak; the kernel is
-shape-generic and the wrapper picks aligned tiles when it can.
+shape-generic and the wrapper PADS to the tile multiple when B or N do not
+divide — padded db rows are masked to +inf in-kernel (they can never reach
+the top-k), padded query rows are sliced off the output. Earlier versions
+instead SHRANK block_q/block_n to the largest divisor, which degenerates to
+1-row blocks (a B×N program grid) whenever B or N is prime — the
+regression test at N=997, B=7 in tests/test_kernels.py pins the fix.
+
+Codec-encoded databases (DESIGN.md §9): ``db`` may be any dtype the codec
+emits (f32 / bf16 / int8); rows are cast to f32 in-kernel and, when a
+``scales`` [N] table is passed, multiplied by their per-row scale BEFORE
+the distance — the fused decode-distance (asymmetric: fp32 query vs
+encoded rows, fp32 accumulation on the MXU). With ``scales=None`` the
+fp32 path is bit-for-bit the historical kernel.
 
 Shapes / dtypes
-  db   [N, D]  f32 (any float dtype; cast to f32 in-kernel)
-  q    [B, D]  f32
-  ->   dists [B, T*k] f32, ids [B, T*k] i32   (T = N / block_n tiles;
-       per-tile partials — NOT the final top-k, see phase 2 above)
+  db     [N, D]  any float/int8 dtype (cast to f32 in-kernel)
+  q      [B, D]  f32
+  scales [N] f32 optional per-row decode scales (int8 codec)
+  ->     dists [B, T*k] f32, ids [B, T*k] i32   (T = ceil(N / block_n)
+         tiles; per-tile partials — NOT the final top-k, see phase 2)
 
 Grid / block layout
-  grid = (B / block_q, N / block_n); block (i, j) loads q tile i and db
-  tile j via BlockSpec (automatic HBM->VMEM pipelining), writes its k
-  partials at output block column j. block_q/block_n are shrunk to the
-  largest divisor of B/N when they don't divide evenly.
+  grid = (ceil(B / block_q), ceil(N / block_n)); block (i, j) loads q tile
+  i and db tile j via BlockSpec (automatic HBM->VMEM pipelining), writes
+  its k partials at output block column j.
 
 Fallback
-  ``interpret=True`` runs the same kernel under the Pallas interpreter
-  (any backend; this is how tests/test_kernels.py runs on CPU).
-  ``ops.flat_topk`` only calls this on TPU (or REPRO_PALLAS=interpret);
-  otherwise it uses the jnp oracle ``ref.distance_topk_ref`` — one
-  [B, N] distance matrix + ``lax.top_k``, numerically identical.
+  ``interpret=None`` resolves platform-aware (kernels.resolve_interpret):
+  the Pallas interpreter off-TPU, the compiled kernel on TPU — callers no
+  longer pass the flag. ``ops.flat_topk`` only calls this on TPU (or
+  REPRO_PALLAS=interpret); otherwise it uses the jnp oracle
+  ``ref.distance_topk_ref`` — one [B, N] distance matrix + ``lax.top_k``,
+  numerically identical.
 """
 from __future__ import annotations
 
@@ -41,14 +54,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 BIG = 3.0e38   # plain float: pallas kernels must not capture traced constants
 
 
-def _kernel(metric: str, k: int, q_ref, db_ref, dist_ref, idx_ref):
+def _kernel(metric: str, k: int, n_total: int, has_scales: bool, *refs):
+    if has_scales:
+        q_ref, db_ref, s_ref, dist_ref, idx_ref = refs
+    else:
+        q_ref, db_ref, dist_ref, idx_ref = refs
+        s_ref = None
     j = pl.program_id(1)
     bn = db_ref.shape[0]
     q = q_ref[...].astype(jnp.float32)                    # [BQ, D]
     x = db_ref[...].astype(jnp.float32)                   # [BN, D]
+    if s_ref is not None:
+        x = x * s_ref[...].astype(jnp.float32)            # decode: [BN,1]·row
     scores = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
     if metric in ("cosine", "ip"):
@@ -59,6 +81,9 @@ def _kernel(metric: str, k: int, q_ref, db_ref, dist_ref, idx_ref):
         d = qn - 2.0 * scores + xn
     col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     base = j * bn
+    # mask db PADDING rows (global id >= N) out of the tile's top-k; a
+    # no-op on fully-valid tiles, so divisible shapes are bit-identical
+    d = jnp.where(col + base < n_total, d, BIG)
 
     for i in range(k):                                    # static, k small
         m = jnp.min(d, axis=1)                            # [BQ]
@@ -71,40 +96,63 @@ def _kernel(metric: str, k: int, q_ref, db_ref, dist_ref, idx_ref):
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
                                              "block_n", "interpret"))
-def distance_topk_pallas(db: jax.Array, q: jax.Array, k: int,
-                         *, metric: str = "cosine", block_q: int = 128,
-                         block_n: int = 1024, interpret: bool = True):
-    """db [N,D], q [B,D] -> per-tile partials (dists [B,T*k], ids [B,T*k]).
-
-    Callers finish with a [B, T*k] -> [B, k] top-k merge (see ops.flat_topk).
-    """
+def _call(db, q, scales, k, metric, block_q, block_n, interpret):
     b, d = q.shape
     n = db.shape[0]
     block_q = min(block_q, b)
-    while b % block_q:
-        block_q -= 1
     block_n = min(block_n, n)
-    while n % block_n:
-        block_n -= 1
     assert k <= block_n, (k, block_n)
-    tiles = n // block_n
+    # pad to the tile multiple instead of shrinking the tiles (see module
+    # docstring): padded q rows are sliced off, padded db rows masked
+    pb = -(-b // block_q) * block_q
+    pn = -(-n // block_n) * block_n
+    if pb > b:
+        q = jnp.concatenate([q, jnp.zeros((pb - b, d), q.dtype)])
+    if pn > n:
+        db = jnp.concatenate([db, jnp.zeros((pn - n, d), db.dtype)])
+        if scales is not None:
+            scales = jnp.concatenate(
+                [scales, jnp.zeros(pn - n, scales.dtype)])
+    tiles = pn // block_n
+    has_scales = scales is not None
 
-    grid = (b // block_q, tiles)
+    in_specs = [
+        pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),      # q
+        pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),      # db tile
+    ]
+    args = [q, db]
+    if has_scales:
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)))
+        args.append(scales.reshape(pn, 1).astype(jnp.float32))
+
+    grid = (pb // block_q, tiles)
     dists, ids = pl.pallas_call(
-        functools.partial(_kernel, metric, k),
+        functools.partial(_kernel, metric, k, n, has_scales),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),      # q
-            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),      # db tile
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
             pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, tiles * k), jnp.float32),
-            jax.ShapeDtypeStruct((b, tiles * k), jnp.int32),
+            jax.ShapeDtypeStruct((pb, tiles * k), jnp.float32),
+            jax.ShapeDtypeStruct((pb, tiles * k), jnp.int32),
         ],
         interpret=interpret,
-    )(q, db)
-    return dists, ids
+    )(*args)
+    return dists[:b], ids[:b]
+
+
+def distance_topk_pallas(db: jax.Array, q: jax.Array, k: int,
+                         *, metric: str = "cosine",
+                         scales: jax.Array | None = None,
+                         block_q: int = 128, block_n: int = 1024,
+                         interpret: bool | None = None):
+    """db [N,D] (+ optional scales [N]), q [B,D] -> per-tile partials
+    (dists [B,T*k], ids [B,T*k]).
+
+    Callers finish with a [B, T*k] -> [B, k] top-k merge (see
+    ops.flat_topk). ``interpret=None`` resolves platform-aware.
+    """
+    return _call(db, q, scales, k, metric, block_q, block_n,
+                 resolve_interpret(interpret))

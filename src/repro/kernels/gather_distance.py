@@ -7,27 +7,38 @@ async DMA: the database stays in HBM (``memory_space=ANY``), each wave issues
 ``WAVE`` row DMAs into a double-buffered VMEM scratch, and the distance for
 wave ``i`` computes while wave ``i+1`` is in flight.
 
+Codec-encoded databases (DESIGN.md §9): ``vectors`` may be any dtype the
+codec emits (f32 / bf16 / int8) — the scratch buffer matches it, so an
+int8 row moves 4x fewer bytes per DMA. When a per-row ``scales`` [N] f32
+table is passed, each row's scale rides its own (overlapped) 4-byte DMA
+and the decode (``row · scale`` in f32) fuses into the distance — the
+asymmetric-distance contract: fp32 query vs encoded rows, fp32
+accumulation. ``scales=None`` keeps the fp32 path bit-for-bit.
+
 Shapes / dtypes
-  vectors [N, D]  f32 (stays in HBM — ``memory_space=ANY``; any float
-                  dtype, scratch matches it, distances compute in f32)
+  vectors [N, D]  f32 / bf16 / int8 (stays in HBM — ``memory_space=ANY``;
+                  scratch matches it, distances compute in f32)
   q       [B, D]  f32
   ids     [B, K]  i32 row ids into ``vectors`` (callers pre-clip to
                   [0, N); invalid slots are masked AFTER the kernel)
+  scales  [N] f32 optional per-row decode scales (int8 codec)
   ->      dists [B, K] f32  (cosine/ip: 1 - <q, x>; l2: squared distance)
 
 Grid / block layout
   grid = (B / block_q,): one step per query block. Per step the q tile
   [BQ, D] and ids tile [BQ, K] live in VMEM (BlockSpec); the database is
   never tiled in. scratch [2, WAVE, D] + 2 DMA semaphores implement the
-  double buffer: the BQ*K row fetches are issued WAVE at a time, and wave
-  i's distances compute while wave i+1's DMAs are in flight. ``wave`` is
+  double buffer (scales add a [2, WAVE, 1] scratch + their own semaphore
+  pair): the BQ*K row fetches are issued WAVE at a time, and wave i's
+  distances compute while wave i+1's DMAs are in flight. ``wave`` is
   shrunk to divide block_q*K.
 
 Fallback
-  ``interpret=True`` runs this kernel under the Pallas interpreter (any
-  backend; kernel tests on CPU). ``ops.gather_distance`` only selects the
-  Pallas path on TPU (or REPRO_PALLAS=interpret); otherwise it runs the
-  jnp oracle ``ref.gather_distance_ref`` — ``take`` + fused dot, same
+  ``interpret=None`` resolves platform-aware (kernels.resolve_interpret):
+  the Pallas interpreter off-TPU, the compiled kernel on TPU — callers no
+  longer pass the flag. ``ops.gather_distance`` only selects the Pallas
+  path on TPU (or REPRO_PALLAS=interpret); otherwise it runs the jnp
+  oracle ``ref.gather_distance_ref`` — ``take`` + fused dot, same
   results. The HNSW search (core/hnsw.py) layers its own -1-padding mask
   on top either way.
 """
@@ -40,12 +51,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
 
-def _kernel(metric: str, wave: int, ids_ref, q_ref, db_ref, out_ref,
-            scratch, sems):
+
+def _kernel(metric: str, wave: int, has_scales: bool, *refs):
+    if has_scales:
+        (ids_ref, q_ref, db_ref, scl_ref, out_ref,
+         scratch, s_scratch, sems, s_sems) = refs
+    else:
+        ids_ref, q_ref, db_ref, out_ref, scratch, sems = refs
+        scl_ref = s_scratch = s_sems = None
     bq, k = ids_ref.shape
-    d = q_ref.shape[1]
-    n_waves = k // wave
     total = bq * k
 
     def dma(slot, w_idx):
@@ -53,10 +69,14 @@ def _kernel(metric: str, wave: int, ids_ref, q_ref, db_ref, out_ref,
         def issue(i, _):
             flat = w_idx * wave + i
             row = ids_ref[flat // k, flat % k]
-            cp = pltpu.make_async_copy(
+            pltpu.make_async_copy(
                 db_ref.at[pl.ds(row, 1)], scratch.at[slot, pl.ds(i, 1)],
-                sems.at[slot])
-            cp.start()
+                sems.at[slot]).start()
+            if has_scales:
+                pltpu.make_async_copy(
+                    scl_ref.at[pl.ds(row, 1)],
+                    s_scratch.at[slot, pl.ds(i, 1)],
+                    s_sems.at[slot]).start()
             return 0
         jax.lax.fori_loop(0, wave, issue, 0)
 
@@ -65,6 +85,11 @@ def _kernel(metric: str, wave: int, ids_ref, q_ref, db_ref, out_ref,
             pltpu.make_async_copy(
                 db_ref.at[pl.ds(0, 1)], scratch.at[slot, pl.ds(i, 1)],
                 sems.at[slot]).wait()
+            if has_scales:
+                pltpu.make_async_copy(
+                    scl_ref.at[pl.ds(0, 1)],
+                    s_scratch.at[slot, pl.ds(i, 1)],
+                    s_sems.at[slot]).wait()
             return 0
         jax.lax.fori_loop(0, wave, w, 0)
 
@@ -87,6 +112,8 @@ def _kernel(metric: str, wave: int, ids_ref, q_ref, db_ref, out_ref,
             b_i, k_i = flat // k, flat % k
             qv = q_ref[b_i, :].astype(jnp.float32)
             xv = rows[i, :].astype(jnp.float32)
+            if has_scales:
+                xv = xv * s_scratch[slot, i, 0]               # fused decode
             if metric in ("cosine", "ip"):
                 dist = 1.0 - jnp.sum(qv * xv)
             else:
@@ -102,10 +129,7 @@ def _kernel(metric: str, wave: int, ids_ref, q_ref, db_ref, out_ref,
 
 @functools.partial(jax.jit, static_argnames=("metric", "block_q", "wave",
                                              "interpret"))
-def gather_distance_pallas(vectors: jax.Array, q: jax.Array, ids: jax.Array,
-                           *, metric: str = "cosine", block_q: int = 8,
-                           wave: int = 8, interpret: bool = True) -> jax.Array:
-    """vectors [N,D] (HBM), q [B,D], ids [B,K] -> dists [B,K] f32."""
+def _call(vectors, q, ids, scales, metric, block_q, wave, interpret):
     b, k = ids.shape
     d = q.shape[1]
     block_q = min(block_q, b)
@@ -114,21 +138,42 @@ def gather_distance_pallas(vectors: jax.Array, q: jax.Array, ids: jax.Array,
     wave = min(wave, block_q * k)
     while (block_q * k) % wave:
         wave -= 1
+    has_scales = scales is not None
+
+    in_specs = [
+        pl.BlockSpec((block_q, k), lambda i: (i, 0)),                # ids
+        pl.BlockSpec((block_q, d), lambda i: (i, 0)),                # q
+        pl.BlockSpec(memory_space=pl.ANY),                           # db
+    ]
+    args = [ids, q, vectors]
+    scratch_shapes = [pltpu.VMEM((2, wave, d), vectors.dtype)]
+    if has_scales:
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))           # scales
+        args.append(scales.reshape(-1, 1).astype(jnp.float32))
+        scratch_shapes.append(pltpu.VMEM((2, wave, 1), jnp.float32))
+    scratch_shapes.append(pltpu.SemaphoreType.DMA((2,)))
+    if has_scales:
+        scratch_shapes.append(pltpu.SemaphoreType.DMA((2,)))
 
     grid = (b // block_q,)
     return pl.pallas_call(
-        functools.partial(_kernel, metric, wave),
+        functools.partial(_kernel, metric, wave, has_scales),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q, k), lambda i: (i, 0)),                # ids
-            pl.BlockSpec((block_q, d), lambda i: (i, 0)),                # q
-            pl.BlockSpec(memory_space=pl.ANY),                        # db
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_q, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((2, wave, d), vectors.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(ids, q, vectors)
+    )(*args)
+
+
+def gather_distance_pallas(vectors: jax.Array, q: jax.Array, ids: jax.Array,
+                           *, metric: str = "cosine",
+                           scales: jax.Array | None = None,
+                           block_q: int = 8, wave: int = 8,
+                           interpret: bool | None = None) -> jax.Array:
+    """vectors [N,D] (HBM, any codec dtype) + optional scales [N], q [B,D],
+    ids [B,K] -> dists [B,K] f32. ``interpret=None`` resolves
+    platform-aware."""
+    return _call(vectors, q, ids, scales, metric, block_q, wave,
+                 resolve_interpret(interpret))

@@ -36,27 +36,37 @@ def _use_pallas() -> tuple[bool, bool]:
 
 # ---------------------------------------------------------------------------
 def gather_distance(vectors: jax.Array, q: jax.Array, ids: jax.Array,
-                    *, metric: str = "cosine") -> jax.Array:
-    """Fused gather+distance: vectors [N,D], q [B,D], ids [B,K] -> [B,K]."""
+                    *, metric: str = "cosine",
+                    scales: jax.Array | None = None) -> jax.Array:
+    """Fused gather+distance: vectors [N,D], q [B,D], ids [B,K] -> [B,K].
+
+    ``vectors`` may be codec-encoded (f32 / bf16 / int8, DESIGN.md §9);
+    ``scales`` [N] fuses the per-row decode into the distance."""
     use, interp = _use_pallas()
     if use:
         from repro.kernels.gather_distance import gather_distance_pallas
         return gather_distance_pallas(vectors, q, ids, metric=metric,
-                                      interpret=interp)
-    return _ref.gather_distance_ref(vectors, q, ids, metric=metric)
+                                      scales=scales, interpret=interp)
+    return _ref.gather_distance_ref(vectors, q, ids, metric=metric,
+                                    scales=scales)
 
 
 def flat_topk(db: jax.Array, q: jax.Array, k: int,
-              *, metric: str = "cosine") -> tuple[jax.Array, jax.Array]:
-    """Exact k-NN: db [N,D], q [B,D] -> (dists [B,k], ids [B,k])."""
+              *, metric: str = "cosine",
+              scales: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Exact k-NN: db [N,D], q [B,D] -> (dists [B,k], ids [B,k]).
+
+    ``db`` may be codec-encoded (f32 / bf16 / int8, DESIGN.md §9);
+    ``scales`` [N] fuses the per-row decode into the distance."""
     use, interp = _use_pallas()
     if use:
         from repro.kernels.distance_topk import distance_topk_pallas
         pd, pi = distance_topk_pallas(db, q, k, metric=metric,
-                                      interpret=interp)
+                                      scales=scales, interpret=interp)
         neg, j = jax.lax.top_k(-pd, k)                 # tiny [B, T*k] merge
         return -neg, jnp.take_along_axis(pi, j, axis=1)
-    return _ref.distance_topk_ref(db, q, k, metric=metric)
+    return _ref.distance_topk_ref(db, q, k, metric=metric, scales=scales)
 
 
 def embedding_bag(table: jax.Array, ids: jax.Array,

@@ -9,27 +9,39 @@ import jax.numpy as jnp
 
 
 def gather_distance_ref(vectors: jax.Array, q: jax.Array, ids: jax.Array,
-                        *, metric: str = "cosine") -> jax.Array:
-    """vectors [N,D], q [B,D], ids [B,K] (valid, clamped) -> dists [B,K]."""
-    x = jnp.take(vectors, ids, axis=0)                     # [B,K,D]
+                        *, metric: str = "cosine",
+                        scales: jax.Array | None = None) -> jax.Array:
+    """vectors [N,D], q [B,D], ids [B,K] (valid, clamped) -> dists [B,K].
+
+    ``scales`` [N] decodes codec-encoded rows (DESIGN.md §9): each
+    gathered row is ``row · scale`` in fp32 — the asymmetric-distance
+    contract (fp32 query vs encoded rows, fp32 accumulation)."""
+    x = jnp.take(vectors, ids, axis=0).astype(jnp.float32)  # [B,K,D]
+    if scales is not None:
+        x = x * jnp.take(scales, ids).astype(jnp.float32)[..., None]
     if metric in ("cosine", "ip"):
-        return 1.0 - jnp.einsum("bd,bkd->bk", q.astype(jnp.float32),
-                                x.astype(jnp.float32))
-    d = x.astype(jnp.float32) - q.astype(jnp.float32)[:, None, :]
+        return 1.0 - jnp.einsum("bd,bkd->bk", q.astype(jnp.float32), x)
+    d = x - q.astype(jnp.float32)[:, None, :]
     return jnp.einsum("bkd,bkd->bk", d, d)
 
 
 def distance_topk_ref(db: jax.Array, q: jax.Array, k: int,
-                      *, metric: str = "cosine") -> tuple[jax.Array, jax.Array]:
-    """db [N,D], q [B,D] -> (dists [B,k] ascending, ids [B,k])."""
+                      *, metric: str = "cosine",
+                      scales: jax.Array | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """db [N,D], q [B,D] -> (dists [B,k] ascending, ids [B,k]).
+
+    ``scales`` [N] decodes codec-encoded db rows in fp32 before the
+    distance (asymmetric distance, DESIGN.md §9)."""
+    x = db.astype(jnp.float32)
+    if scales is not None:
+        x = x * scales.astype(jnp.float32)[:, None]
     if metric in ("cosine", "ip"):
-        d = 1.0 - jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
-                             db.astype(jnp.float32))
+        d = 1.0 - jnp.einsum("bd,nd->bn", q.astype(jnp.float32), x)
     else:
         d = (jnp.sum(q.astype(jnp.float32) ** 2, -1)[:, None]
-             - 2.0 * jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
-                                db.astype(jnp.float32))
-             + jnp.sum(db.astype(jnp.float32) ** 2, -1)[None, :])
+             - 2.0 * jnp.einsum("bd,nd->bn", q.astype(jnp.float32), x)
+             + jnp.sum(x ** 2, -1)[None, :])
     neg, ids = jax.lax.top_k(-d, k)
     return -neg, ids
 

@@ -39,6 +39,13 @@ def main():
     ap.add_argument("--index", default="hnsw",
                     choices=("flat", "ivf", "hnsw", "tiered"),
                     help="VectorIndex backend for the RAG retriever")
+    ap.add_argument("--index-dtype", default=None,
+                    choices=("fp32", "bf16", "int8"),
+                    help="row-storage codec (DESIGN.md §9): encoded "
+                         "device blocks + snapshot pages (int8 ≈ 4x "
+                         "smaller), asymmetric search with fp32 rerank. "
+                         "Default: fp32 (or the stored codec on a warm "
+                         "restore — a mismatch is rejected)")
     ap.add_argument("--retrieval-batch", type=_power_of_two, default=128,
                     help="RetrievalEngine bucket cap (power of two)")
     ap.add_argument("--retrieval-cache", type=int, default=1024,
@@ -74,10 +81,15 @@ def main():
         rag = RAGPipeline(index_kind=args.index, index_store=store,
                           retrieval_batch=args.retrieval_batch,
                           retrieval_cache=args.retrieval_cache,
-                          index_shards=args.shards)
+                          index_shards=args.shards,
+                          index_dtype=args.index_dtype)
         if rag.index.shard_count > 1:
             logger.info(f"index sharded over {rag.index.shard_count} "
                         f"devices (key-hash routing + fan-out search)")
+        if rag.index.storage_dtype != "fp32":
+            logger.info(f"index rows stored as {rag.index.storage_dtype} "
+                        "(encoded device blocks + snapshot pages, "
+                        "asymmetric search + fp32 rerank; DESIGN.md §9)")
         if rag.index.size:
             # warm restore: embeddings came back from the store (epoch
             # included — the retrieval cache keys on it); only the text

@@ -51,15 +51,22 @@ class RAGPipeline:
                  generate_fn: Callable[[str], str] | None = None,
                  M: int = 16, ef_construction: int = 100,
                  retrieval_batch: int = 128, retrieval_cache: int = 1024,
-                 index_shards: int | None = None):
+                 index_shards: int | None = None,
+                 index_dtype: str | None = None):
         # index_store: an ``IndexStore`` (or path) making the index durable
         # (DESIGN.md §7) — a warm store restores the previous session's
         # index, mutation_epoch included, instead of building a fresh one.
         # index_shards: partition the index over the device mesh
         # (DESIGN.md §8); None keeps the backend default (or, on a warm
         # restore, the stored shard count).
+        # index_dtype: row-storage codec (DESIGN.md §9, fp32/bf16/int8);
+        # None keeps the backend default — and, on a warm restore, the
+        # stored codec (an explicit mismatch with a warm store is
+        # rejected: encoded pages cannot be transcoded).
         self.encoder = encoder or HashingEncoder()
         shard_cfg = {} if index_shards is None else {"n_shards": index_shards}
+        if index_dtype is not None:
+            shard_cfg["dtype"] = index_dtype
         self.index = index if index is not None else make_index(
             index_kind, store=index_store, metric="cosine",
             dim=self.encoder.dim, M=M, ef_construction=ef_construction,

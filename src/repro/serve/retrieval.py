@@ -122,6 +122,12 @@ class RetrievalEngine:
             raise ValueError(f"max_batch must be a power of two, got {max_batch}")
         self.index = index
         self.shards = getattr(index, "shard_count", 1)
+        # codec transparency (DESIGN.md §9): the engine never touches the
+        # row encoding — query_batch returns decoded results and every
+        # mutation bumps mutation_epoch regardless of dtype, so the
+        # cache-epoch privacy invariant is codec-independent. Surfaced
+        # here only for logging.
+        self.index_dtype = getattr(index, "storage_dtype", "fp32")
         self.max_batch = max_batch
         self.cache_size = cache_size
         self.queue: collections.deque[RetrievalRequest] = collections.deque()

@@ -174,7 +174,8 @@ class IndexStore:
 
     # ----------------------------------------------------------- restore
     def load_index(self, expect_kind: str | None = None,
-                   n_shards: int | None = None):
+                   n_shards: int | None = None,
+                   expect_dtype: str | None = None):
         """Warm restore: latest snapshot + WAL replay, then attach.
 
         The result is bit-for-bit equal to the index that was live when
@@ -188,7 +189,12 @@ class IndexStore:
         1 and vice versa. Without an override, a stored shard count that
         exceeds this process's device count is clamped (with a log line)
         instead of bricking the store — shard count is an execution
-        resource, not data."""
+        resource, not data.
+
+        ``expect_dtype`` is DIFFERENT: the storage dtype (DESIGN.md §9)
+        determines the stored bytes themselves (encoded pages cannot be
+        transcoded), so a mismatch with the stored codec is rejected with
+        an error rather than overridden."""
         import jax
 
         from repro.core.index import make_index
@@ -206,6 +212,15 @@ class IndexStore:
                 f"store at {self.root} holds a {cfg['kind']!r} index, "
                 f"not {expect_kind!r}")
         params = dict(cfg["params"])
+        stored_dtype = params.get("dtype", "fp32")
+        if expect_dtype is not None and expect_dtype != stored_dtype:
+            raise ValueError(
+                f"store at {self.root} holds a {stored_dtype!r}-encoded "
+                f"index; cannot restore it as dtype={expect_dtype!r} — "
+                "storage dtype is part of the stored bytes (encoded "
+                "snapshot pages cannot be transcoded). Omit dtype= to "
+                f"keep {stored_dtype!r}, or re-ingest the corpus into a "
+                "fresh store.")
         if n_shards is not None:
             params["n_shards"] = int(n_shards)
         elif params.get("n_shards", 1) > len(jax.devices()):

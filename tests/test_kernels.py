@@ -83,6 +83,107 @@ def test_flash_decode(b, h, kvh, dh, s, bs, cur):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_distance_topk_prime_shapes(metric):
+    """Regression (DESIGN.md §9 satellite): B or N prime used to collapse
+    the block-shaving loop to 1-row blocks (a B×N program grid). The
+    kernel now PADS to the tile multiple and masks the padded db rows —
+    results must match the oracle and never leak a padded row id."""
+    n, b, k = 997, 7, 5
+    db = jax.random.normal(jax.random.PRNGKey(0), (n, 32))
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, 32))
+    pd, pi = distance_topk_pallas(db, q, k, metric=metric, block_q=4,
+                                  block_n=64, interpret=True)
+    assert ((np.asarray(pi) >= 0) & (np.asarray(pi) < n)).all()
+    neg, j = jax.lax.top_k(-pd, k)
+    got_d = -neg
+    got_i = jnp.take_along_axis(pi, j, axis=1)
+    exp_d, exp_i = ref.distance_topk_ref(db, q, k, metric=metric)
+    np.testing.assert_allclose(np.sort(np.asarray(got_d)),
+                               np.sort(np.asarray(exp_d)),
+                               rtol=1e-4, atol=1e-4)
+    assert (np.sort(np.asarray(got_i)) == np.sort(np.asarray(exp_i))).all()
+
+
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_distance_topk_scales(metric):
+    """Codec-encoded db + fused per-row decode (DESIGN.md §9): the int8
+    kernel must equal the oracle on the decoded rows."""
+    from repro.core.codec import get_codec
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(256, 32)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    enc, scales = get_codec("int8").encode(x)
+    dec = get_codec("int8").decode(enc, scales)
+    pd, pi = distance_topk_pallas(jnp.asarray(enc), q, 6, metric=metric,
+                                  scales=jnp.asarray(scales), block_q=4,
+                                  block_n=64, interpret=True)
+    neg, j = jax.lax.top_k(-pd, 6)
+    exp_d, exp_i = ref.distance_topk_ref(jnp.asarray(dec), q, 6,
+                                         metric=metric)
+    np.testing.assert_allclose(np.sort(np.asarray(-neg)),
+                               np.sort(np.asarray(exp_d)),
+                               rtol=1e-4, atol=1e-4)
+    got_i = jnp.take_along_axis(pi, j, axis=1)
+    assert (np.sort(np.asarray(got_i)) == np.sort(np.asarray(exp_i))).all()
+
+
+@pytest.mark.parametrize("metric", ["cosine", "l2"])
+def test_gather_distance_scales(metric):
+    """int8 rows + per-row scale DMA: fused decode inside the wave loop
+    must equal the oracle's take+decode+dot (DESIGN.md §9)."""
+    from repro.core.codec import get_codec
+
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(200, 24)).astype(np.float32)
+    enc, scales = get_codec("int8").encode(x)
+    q = jnp.asarray(rng.normal(size=(6, 24)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 200, size=(6, 9)).astype(np.int32))
+    out = gather_distance_pallas(jnp.asarray(enc), q, ids, metric=metric,
+                                 scales=jnp.asarray(scales), interpret=True)
+    exp = ref.gather_distance_ref(jnp.asarray(enc), q, ids, metric=metric,
+                                  scales=jnp.asarray(scales))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_resolve_interpret_platform_aware(monkeypatch):
+    """interpret=None resolves per-platform (interpret only off-TPU) and
+    honors the REPRO_PALLAS_INTERPRET env override."""
+    from repro.kernels import resolve_interpret
+
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert resolve_interpret(None) == (not on_tpu)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert resolve_interpret(None) is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert resolve_interpret(None) is True
+    assert resolve_interpret(False) is False     # explicit arg still wins
+
+
+def test_flat_topk_scales_dispatch(monkeypatch):
+    """ops.flat_topk with scales: interpret == ref, like the f32 path."""
+    from repro.core.codec import get_codec
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(2)
+    enc, scales = get_codec("int8").encode(
+        rng.normal(size=(128, 32)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    monkeypatch.setenv("REPRO_PALLAS", "off")
+    d0, i0 = ops.flat_topk(jnp.asarray(enc), q, 5,
+                           scales=jnp.asarray(scales))
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    d1, i1 = ops.flat_topk(jnp.asarray(enc), q, 5,
+                           scales=jnp.asarray(scales))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5)
+    assert (np.asarray(i0) == np.asarray(i1)).all()
+
+
 def test_ops_dispatch_matches_ref(monkeypatch):
     """ops.* under REPRO_PALLAS=interpret must equal REPRO_PALLAS=off."""
     from repro.kernels import ops
