@@ -67,8 +67,12 @@ def sharded_flat_topk(mesh: Mesh, db: jax.Array, queries: jax.Array, k: int,
         d = jnp.where(sentinel, jnp.asarray(jnp.inf, d.dtype), d)
         i = jnp.where(sentinel, -1, i)
         d, i = trim_merge_width(d, i, k, jnp.asarray(jnp.inf, d.dtype))
-        # innermost axis first: smallest hop first in the merge tree
-        return hierarchical_topk(d, i, k, tuple(reversed(axes)), wire_bf16)
+        # innermost axis first: smallest hop first in the merge tree;
+        # static axis sizes engage the ppermute tree reduction per axis
+        merge_axes = tuple(reversed(axes))
+        return hierarchical_topk(d, i, k, merge_axes, wire_bf16,
+                                 axis_sizes=tuple(int(mesh.shape[a])
+                                                  for a in merge_axes))
 
     fn = shard_map(local, mesh=mesh,
                    in_specs=(P(axes, None), P(None, None)),

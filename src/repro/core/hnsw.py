@@ -306,9 +306,12 @@ def _beam_search(g: DeviceGraph, q: jax.Array, ep: jax.Array,
     return beam_i, beam_d
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iters"))
-def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
-                max_iters: int | None):
+def search_core(g: DeviceGraph, q: jax.Array, k: int, ef: int,
+                max_iters: int | None = None):
+    """Traceable whole-search body (descent + beam + tombstone filter),
+    shared by the single-graph jit below and the stacked segment fan-out
+    (core/stacked.py), which calls it per-shard inside ``shard_map``.
+    Queries must already be prepped (``_prep_queries``)."""
     ep = jnp.broadcast_to(g.entry, q.shape[:1])
     x0 = jnp.take(g.vectors, ep, axis=0)
     if g.scales is not None:                 # decode the entry row (§9)
@@ -325,6 +328,12 @@ def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
     beam_d, beam_i = jax.lax.sort((beam_d, beam_i), num_keys=1,
                                   is_stable=True)
     return beam_i[:, :k], beam_d[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iters"))
+def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
+                max_iters: int | None):
+    return search_core(g, q, k, ef, max_iters)
 
 
 def search_graph(g: DeviceGraph, queries, k: int = 10, ef: int = 64,

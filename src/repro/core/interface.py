@@ -28,9 +28,11 @@ small-world graph cannot be row-partitioned without breaking its search
 invariants, so the sharded HNSW is a FAISS/Milvus-style segment set —
 each shard owns an independent graph over its hash-routed keys. CRUD
 routes to the owning shard (same ``shard_of_key`` as every backend), ANN
-queries run the lock-step beam search on every shard's graph and merge
-by distance, and the exact/flat phase fans out through the sharded
-top-k substrate (``fanout_exact_topk``). Per-shard graphs are smaller
+queries run the lock-step beam search on every shard's graph in ONE
+compiled dispatch (the stacked segment fan-out, ``core/stacked.py``,
+cached per mutation epoch) and merge in-program, and the exact/flat
+phase queries epoch-cached device-resident blocks
+(``build_exact_blocks``/``exact_topk_blocks``). Per-shard graphs are smaller
 (N/S rows -> cheaper expansions) and per-shard ANN results are merged
 candidates, so cross-shard-count parity holds for ``exact_query`` but
 ``query_batch`` is parity-at-the-recall-level only — the per-shard
@@ -44,12 +46,14 @@ import numpy as np
 
 from repro.core import hnsw as jhnsw
 from repro.core import hnsw_build as build
+from repro.core import stacked as jstacked
 from repro.core.codec import (check_codec_arrays as _check_codec_arrays,
                               effective_rerank, get_codec, rerank_exact)
 from repro.core.flat import FlatIndex
 from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
-from repro.core.sharded import fanout_exact_topk, shard_of_key
+from repro.core.sharded import (build_exact_blocks, exact_topk_blocks,
+                                shard_mesh, shard_of_key)
 
 
 class HNSW(VectorIndex):
@@ -95,6 +99,14 @@ class HNSW(VectorIndex):
         self._key2shard: dict[str, int] = {}
         self._seq: dict[str, int] = {}
         self._next_seq = 0
+        # epoch-keyed derived device state (sharded only, DESIGN.md §8):
+        # the stacked segment set, the gid-aligned fp32 rerank rows, and
+        # the exact-phase placed blocks. Mutations invalidate via the
+        # epoch key; restores drop them explicitly (_drop_derived) since
+        # a restore may land on the same epoch with different rows.
+        self._stacked_cache: tuple[int, jstacked.StackedGraphs] | None = None
+        self._rerank_rows_cache: tuple[int, np.ndarray] | None = None
+        self._exact_cache: tuple | None = None
         if self.n_shards > 1:
             self._shards = [
                 HNSW(distance_function=distance_function, M=M,
@@ -386,7 +398,71 @@ class HNSW(VectorIndex):
         keys = [[self._keys[i] if i >= 0 else None for i in row] for row in ids]
         return keys, dists
 
+    def _drop_derived(self) -> None:
+        """Drop the epoch-keyed derived device state. Needed on restore:
+        a restored index can land on the SAME epoch number as the cached
+        state while holding different rows, so the epoch key alone is
+        not a safe invalidator there."""
+        self._stacked_cache = None
+        self._rerank_rows_cache = None
+        self._exact_cache = None
+
+    def _stacked(self) -> jstacked.StackedGraphs:
+        """Epoch-cached stacked segment set: per-shard resident device
+        graphs stacked along [S, ...] (core/stacked.py). Rebuilt only
+        when the index mutates; ``_dg()`` keeps each child's resident
+        graph synced incrementally, so a rebuild after a small mutation
+        moves O(dirty) host bytes, then pads + stacks on device."""
+        if (self._stacked_cache is not None
+                and self._stacked_cache[0] == self._epoch):
+            return self._stacked_cache[1]
+        graphs = [child._dg() if child._builder is not None else None
+                  for child in self._shards]
+        st = jstacked.stack_device_graphs(graphs, shard_mesh(self.n_shards))
+        self._stacked_cache = (self._epoch, st)
+        return st
+
+    def _rerank_rows(self, st: jstacked.StackedGraphs) -> np.ndarray:
+        """Epoch-cached gid-aligned canonical fp32 rows [S*cap, D]: the
+        stacked search's global ids index this array directly, so the
+        lossy-codec rerank (DESIGN.md §9) needs no id remapping."""
+        if (self._rerank_rows_cache is not None
+                and self._rerank_rows_cache[0] == self._epoch):
+            return self._rerank_rows_cache[1]
+        dim = int(st.vectors.shape[-1])
+        rows = np.zeros((self.n_shards * st.cap, dim), np.float32)
+        for s, child in enumerate(self._shards):
+            if child._builder is not None:
+                n = child._builder.n
+                rows[s * st.cap:s * st.cap + n] = child._builder.vectors[:n]
+        self._rerank_rows_cache = (self._epoch, rows)
+        return rows
+
     def _query_batch_sharded(self, q: np.ndarray, k: int, ef: int | None):
+        """One compiled dispatch at any shard count: per-shard beam
+        search + in-program tree merge over the epoch-cached stacked
+        segment set (core/stacked.py). Lossy codecs over-fetch
+        ``k * rerank_factor`` per shard, merge in-program, and rerank
+        the merged candidates exactly in fp32 against the gid-aligned
+        canonical rows."""
+        st = self._stacked()
+        rf = effective_rerank(self._codec, self.rerank_factor)
+        kf = k * rf
+        d, gid = jstacked.search_stacked(st, q, kf,
+                                         max(ef or self.ef_search, kf))
+        if rf > 1:
+            d, gid = rerank_exact(self._rerank_rows(st), q, gid, k,
+                                  metric=self.metric)
+        cap = st.cap
+        keys = [[self._shards[int(g) // cap]._keys[int(g) % cap]
+                 if g >= 0 else None for g in row] for row in gid]
+        return keys, d
+
+    def _query_batch_sharded_loop(self, q: np.ndarray, k: int,
+                                  ef: int | None):
+        """Per-child Python fan-out (S dispatches + host merge): the
+        pre-compiled-path implementation, kept as the parity oracle for
+        the stacked fan-out (tests/test_sharded.py)."""
         parts = [(child.query_batch(q, k=k, ef=ef))
                  for child in self._shards if child._builder is not None]
         if not parts:
@@ -402,10 +478,11 @@ class HNSW(VectorIndex):
     def exact_query(self, query, k: int = 10):
         """Brute-force oracle over the same LIVE vectors -> (keys, dists).
 
-        Sharded: the flat phase fans out — every shard scans its own live
-        rows with the fused kernel and the per-shard top-k merges through
-        the hierarchical tree (``fanout_exact_topk``, DESIGN.md §8), so
-        exact results are shard-count independent."""
+        Sharded: the flat phase queries the epoch-cached device blocks —
+        every shard scans its own live rows with the fused kernel and the
+        per-shard top-k merges through the ppermute tree
+        (``exact_topk_blocks``, DESIGN.md §8), so exact results are
+        shard-count independent and steady-state calls upload nothing."""
         if self.n_shards > 1:
             return self._exact_query_sharded(query, k)
         if self._builder is None:
@@ -438,10 +515,16 @@ class HNSW(VectorIndex):
         items.sort()
         return items
 
-    def _exact_query_sharded(self, query, k: int):
+    def _exact_placed(self):
+        """Epoch-cached exact-phase blocks: (items, placed). The host
+        repack + ``device_put`` of the [S, R, D] block array happens once
+        per mutation epoch (same invalidation contract as the serve-layer
+        LRU); steady-state exact search then queries resident blocks
+        with zero host-byte movement (``exact_topk_blocks``)."""
+        if (self._exact_cache is not None
+                and self._exact_cache[0] == self._epoch):
+            return self._exact_cache[1], self._exact_cache[2]
         items = self._live_by_seq()
-        if not items:
-            raise ValueError("index is empty")
         # canonical gid = rank in insertion order, grouped per shard in
         # one O(live) pass
         ranks: list[list[int]] = [[] for _ in range(self.n_shards)]
@@ -449,25 +532,36 @@ class HNSW(VectorIndex):
         for rank, (_, _, s, node) in enumerate(items):
             ranks[s].append(rank)
             nodes[s].append(node)
+        dim = 0
         groups = []
         for s, child in enumerate(self._shards):
+            if child._builder is not None:
+                dim = int(child._builder.vectors.shape[1])
             if ranks[s] and child._builder is not None:
                 vecs = np.asarray(child._builder.vectors[nodes[s]],
                                   np.float32)
             else:
-                vecs = np.zeros((0, np.asarray(query).shape[-1]), np.float32)
+                vecs = np.zeros((0, 0), np.float32)
             groups.append((vecs, np.asarray(ranks[s], np.int32)))
+        # lossy codecs: rows are already in final stored form (normalized
+        # BEFORE quantization, §9) — re-normalizing the quantized rows
+        # here would score different values than the 1-shard exact path
+        placed = build_exact_blocks(
+            groups, dim, normalize=(self.metric == "cosine"
+                                    and not self._codec.lossy))
+        self._exact_cache = (self._epoch, items, placed)
+        return items, placed
+
+    def _exact_query_sharded(self, query, k: int):
+        items, placed = self._exact_placed()
+        if not items:
+            raise ValueError("index is empty")
         q = np.asarray(query, np.float32)
         squeeze = q.ndim == 1
         if squeeze:
             q = q[None]
-        # lossy codecs: rows are already in final stored form (normalized
-        # BEFORE quantization, §9) — re-normalizing the quantized rows
-        # here would score different values than the 1-shard exact path
-        d, g = fanout_exact_topk(groups, q, min(k, len(items)),
-                                 metric=self.metric,
-                                 normalize=(self.metric == "cosine"
-                                            and not self._codec.lossy))
+        d, g = exact_topk_blocks(placed, q, min(k, len(items)),
+                                 metric=self.metric)
         keys = [[items[int(j)][1] if j >= 0 else None for j in row]
                 for row in g]
         if squeeze:
@@ -602,6 +696,7 @@ class HNSW(VectorIndex):
             self._seq = {k: int(v) for k, v in meta["seq"]}
             self._next_seq = int(meta["next_seq"])
             self._epoch = int(meta["epoch"])
+            self._drop_derived()
             return
         if meta["n"] == 0:                # empty state: no builder yet
             self._builder = None
@@ -736,6 +831,7 @@ class HNSW(VectorIndex):
         self._scales = None
         self._device_graph = None
         self._deleted_dirty = False
+        self._drop_derived()
         self._key2shard = {}
         self._seq = {}
         self._next_seq = 0

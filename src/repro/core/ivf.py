@@ -34,7 +34,7 @@ from repro.core.codec import (check_codec_arrays as _check_codec_arrays,
 from repro.core.hnsw_build import normalize_rows
 from repro.core.index import VectorIndex
 from repro.core.sharded import (SHARD_AXIS, ShardedRows, hierarchical_topk,
-                                trim_merge_width)
+                                resolve_wire_bf16, trim_merge_width)
 from repro.kernels import ops
 
 
@@ -149,7 +149,7 @@ def search_ivf(idx: IVFIndex, queries, k: int = 10, nprobe: int = 8):
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=64)
 def _ivf_fanout_fn(mesh, k: int, nprobe: int, metric: str,
-                   has_scales: bool = False):
+                   has_scales: bool = False, wire_bf16: bool = False):
     """Compiled sharded IVF search. blocks [S,R,D] + lists [S,nlist,cap] +
     gids [S,R] (and, for a scaled codec, scales [S,R]) sharded over
     ``"shard"``; centroids [nlist,D] and queries [B,D] replicated ->
@@ -178,7 +178,9 @@ def _ivf_fanout_fn(mesh, k: int, nprobe: int, metric: str,
         g = jnp.take(gid, slots)
         d, g = trim_merge_width(d, g, k, INF)
         g = jnp.where(d >= INF, -1, g)
-        return hierarchical_topk(d, g, k, (SHARD_AXIS,), tie_break_ids=True)
+        return hierarchical_topk(d, g, k, (SHARD_AXIS,),
+                                 wire_bf16=wire_bf16, tie_break_ids=True,
+                                 axis_sizes=(mesh.shape[SHARD_AXIS],))
 
     if has_scales:
         fn = shard_map(
@@ -422,7 +424,8 @@ class IVFVectorIndex(VectorIndex):
         # same candidate-capacity clamp the 1-shard path applies
         k_eff = min(min(k * rf, n_live), npr * cap_global)
         fn = _ivf_fanout_fn(mesh, k_eff, npr, self.metric,
-                            has_scales=scl is not None)
+                            has_scales=scl is not None,
+                            wire_bf16=resolve_wire_bf16(None))
         d, g = (fn(blocks, lists, gids, scl, cent, qj) if scl is not None
                 else fn(blocks, lists, gids, cent, qj))
         d, g = np.asarray(d), np.asarray(g)

@@ -34,8 +34,10 @@ pre-existing test suite double as the sharded path's parity oracle.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
+import os
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +52,16 @@ from repro.kernels import ops
 
 INF = np.float32(3e38)
 SHARD_AXIS = "shard"
+
+
+def resolve_wire_bf16(flag: bool | None) -> bool:
+    """Resolve a per-call/per-index ``wire_bf16`` knob: explicit values
+    win; None falls back to the REPRO_WIRE_BF16 env toggle (off by
+    default — bf16 wire halves merge bytes but costs bitwise parity with
+    the 1-shard path, so it is opt-in)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_WIRE_BF16", "0") == "1"
 # re-layout the slot tables when free (tombstoned/reusable) slots exceed
 # this fraction of block capacity: bounds the top-k slack (see pack())
 REPACK_FREE_FRACTION = 0.25
@@ -111,7 +123,7 @@ def trim_merge_width(d: jax.Array, ids: jax.Array, k: int, inf
 
 @functools.lru_cache(maxsize=64)
 def _fanout_topk_fn(mesh: Mesh, k: int, slack: int, metric: str,
-                    has_scales: bool = False):
+                    has_scales: bool = False, wire_bf16: bool = False):
     """Compiled sharded exact top-k.
 
     blocks [S, R, D] + gids [S, R] (sharded over ``"shard"``), queries
@@ -124,7 +136,16 @@ def _fanout_topk_fn(mesh: Mesh, k: int, slack: int, metric: str,
     ``k + slack`` candidates (slack = the pack-time bound on dead slots
     per shard), masks by gid, and re-selects k. Missing slots come back
     as (INF, -1).
+
+    The merge runs the ppermute tree reduction (static axis size from
+    the mesh); ``wire_bf16`` halves its distance payload per round at
+    the cost of bf16-resolution ordering (ids stay exact). Cache keys
+    are (mesh, k, quantized slack, metric, has_scales, wire_bf16) —
+    every component takes O(log R) or O(1) distinct values as the
+    corpus grows, so the lru_cache cannot churn across epochs.
     """
+    n_shards = mesh.shape[SHARD_AXIS]
+
     def local(blk, gid, q, scl=None):
         blk, gid = blk[0], gid[0]
         r = blk.shape[0]
@@ -135,7 +156,9 @@ def _fanout_topk_fn(mesh: Mesh, k: int, slack: int, metric: str,
         d = jnp.where(g >= 0, d, jnp.float32(INF))
         d, g = trim_merge_width(d, g, k, jnp.float32(INF))
         g = jnp.where(d >= jnp.float32(INF), -1, g)
-        return hierarchical_topk(d, g, k, (SHARD_AXIS,), tie_break_ids=True)
+        return hierarchical_topk(d, g, k, (SHARD_AXIS,),
+                                 wire_bf16=wire_bf16, tie_break_ids=True,
+                                 axis_sizes=(n_shards,))
 
     if has_scales:
         fn = shard_map(lambda blk, gid, scl, q: local(blk, gid, q, scl),
@@ -163,11 +186,18 @@ def _quantize_slack(slack: int) -> int:
     return 1 << (slack - 1).bit_length()
 
 
+# incremented on every block upload — tests assert steady-state sharded
+# search performs ZERO per-query device_put of row blocks (ISSUE 6)
+PLACE_COUNT = 0
+
+
 def place_blocks(blocks: np.ndarray, gids: np.ndarray, mesh: Mesh,
                  scales: np.ndarray | None = None):
     """Upload one [S, R, D] block array + its [S, R] gid map (and, for a
     scaled codec, the [S, R] scale table), row blocks resident on their
     owning shard's device."""
+    global PLACE_COUNT
+    PLACE_COUNT += 1
     b = jax.device_put(jnp.asarray(blocks),
                        NamedSharding(mesh, P(SHARD_AXIS, None, None)))
     g = jax.device_put(jnp.asarray(gids),
@@ -179,20 +209,37 @@ def place_blocks(blocks: np.ndarray, gids: np.ndarray, mesh: Mesh,
     return b, g, s
 
 
-def fanout_exact_topk(groups, queries, k: int, *, metric: str,
-                      normalize: bool = False
-                      ) -> tuple[np.ndarray, np.ndarray]:
-    """One-shot sharded exact search over explicit per-shard row groups.
+@dataclasses.dataclass(frozen=True)
+class ExactBlocks:
+    """Device-resident exact-phase row blocks, built once per mutation
+    epoch and reused for every query until the index mutates (the same
+    invalidation contract the serve-layer LRU uses). ``slack`` is already
+    ``_quantize_slack``-rounded, so the compiled-fn cache key derived
+    from an ExactBlocks never takes more than O(log R) distinct values
+    as the corpus grows."""
+    mesh: Mesh
+    blocks: jax.Array            # [S, R, D] sharded over "shard"
+    gids: jax.Array              # [S, R] sharded over "shard"
+    slack: int                   # quantized over-fetch bound
+    n_rows: int                  # total live rows across groups
+
+
+def build_exact_blocks(groups, dim: int, *, normalize: bool = False
+                       ) -> ExactBlocks | None:
+    """Host repack + upload of per-shard row groups -> placed blocks.
 
     groups: list of (vectors [n_s, D], gids [n_s]) — one entry per shard
-    (n_s may be 0). Used by backends whose rows do not live in a
-    ``ShardedRows`` (the HNSW/tiered exact phase searches the per-shard
-    graphs' live vectors). queries [B, D] -> (dists [B, k], gids [B, k]),
-    missing slots (INF, -1).
+    (n_s may be 0). Returns None when every group is empty (degenerate
+    case: no block array is materialized and nothing touches a device).
+    The expensive half of the old one-shot ``fanout_exact_topk``; cache
+    the result keyed by ``mutation_epoch`` and query it many times via
+    ``exact_topk_blocks``.
     """
     s = len(groups)
-    dim = queries.shape[1]
-    r = max(max((v.shape[0] for v, _ in groups), default=0), 1)
+    total = sum(v.shape[0] for v, _ in groups)
+    if total == 0:
+        return None
+    r = max(v.shape[0] for v, _ in groups)
     blocks = np.zeros((s, r, dim), np.float32)
     gids = np.full((s, r), -1, np.int32)
     slack = 0
@@ -202,13 +249,46 @@ def fanout_exact_topk(groups, queries, k: int, *, metric: str,
             gids[j, :v.shape[0]] = g
         slack = max(slack, r - v.shape[0])
     mesh = shard_mesh(s)
+    bl, gi = place_blocks(blocks, gids, mesh)
+    return ExactBlocks(mesh=mesh, blocks=bl, gids=gi,
+                       slack=_quantize_slack(slack), n_rows=total)
+
+
+def exact_topk_blocks(placed: ExactBlocks, queries, k: int, *, metric: str,
+                      wire_bf16: bool | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Query already-placed exact-phase blocks: zero host-byte movement
+    on the steady-state path — one compiled dispatch over resident
+    device blocks."""
     q = jnp.asarray(queries, jnp.float32)
     if metric == "cosine":
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-    fn = _fanout_topk_fn(mesh, k, _quantize_slack(slack), metric)
-    bl, gi = place_blocks(blocks, gids, mesh)
-    d, g = fn(bl, gi, q)
+    fn = _fanout_topk_fn(placed.mesh, k, placed.slack, metric,
+                         wire_bf16=resolve_wire_bf16(wire_bf16))
+    d, g = fn(placed.blocks, placed.gids, q)
     return np.asarray(d), np.asarray(g)
+
+
+def fanout_exact_topk(groups, queries, k: int, *, metric: str,
+                      normalize: bool = False,
+                      wire_bf16: bool | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """One-shot sharded exact search over explicit per-shard row groups
+    (``build_exact_blocks`` + ``exact_topk_blocks`` back to back; callers
+    with a mutation epoch should cache the built blocks instead).
+    queries [B, D] -> (dists [B, k], gids [B, k]), missing slots
+    (INF, -1); all-empty groups short-circuit host-side with no device
+    work at all.
+    """
+    queries = np.asarray(queries, np.float32)
+    placed = build_exact_blocks(groups, queries.shape[1],
+                                normalize=normalize)
+    if placed is None:
+        b = queries.shape[0]
+        return (np.full((b, k), INF, np.float32),
+                np.full((b, k), -1, np.int32))
+    return exact_topk_blocks(placed, queries, k, metric=metric,
+                             wire_bf16=wire_bf16)
 
 
 # ---------------------------------------------------------------------------
@@ -226,12 +306,15 @@ class ShardedRows:
 
     def __init__(self, *, n_shards: int = 1, metric: str = "cosine",
                  dim: int | None = None, normalize_on_pack: bool = False,
-                 codec: VectorCodec | str | None = None):
+                 codec: VectorCodec | str | None = None,
+                 wire_bf16: bool | None = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.n_shards = n_shards
         self.metric = metric
         self.dim = dim
+        # None -> REPRO_WIRE_BF16 env default (resolve_wire_bf16)
+        self.wire_bf16 = wire_bf16
         # metric-appropriate normalization at pack time (flat semantics);
         # IVF normalizes at insert instead and packs raw. Under a LOSSY
         # codec the normalization moves to ingest (rows must be in final
@@ -596,7 +679,8 @@ class ShardedRows:
             qj = qj / jnp.maximum(
                 jnp.linalg.norm(qj, axis=-1, keepdims=True), 1e-12)
         fn = _fanout_topk_fn(mesh, k, slack, self.metric,
-                             has_scales=scl is not None)
+                             has_scales=scl is not None,
+                             wire_bf16=resolve_wire_bf16(self.wire_bf16))
         d, g = (fn(blocks, gids, scl, qj) if scl is not None
                 else fn(blocks, gids, qj))
         return np.asarray(d), np.asarray(g)

@@ -305,6 +305,18 @@ class TieredIndex(VectorIndex):
         return out_keys, np.asarray(out_d, np.float32)
 
     def _query_batch_sharded(self, q: np.ndarray, k: int, ef: int):
+        """Sharded ANN: delegate to the inner HNSW's one-dispatch stacked
+        fan-out (core/stacked.py) — the per-shard graphs ARE the inner
+        index's graphs, so the compiled path searches exactly the same
+        segment set the host loop did, in one XLA dispatch instead of S
+        host-driven beam searches. The host loop survives as
+        ``_query_batch_sharded_loop`` (the tier-traffic accounting model
+        and the stacked path's parity oracle); slow-tier transaction
+        counting for sharded searches goes through it or
+        ``simulate_search_traffic``."""
+        return self.inner._query_batch_sharded(q, k, ef)
+
+    def _query_batch_sharded_loop(self, q: np.ndarray, k: int, ef: int):
         tiers = self._tiers_sharded()
         out_keys, out_d = [], []
         for qv in q:

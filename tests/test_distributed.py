@@ -11,12 +11,13 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_sub(code: str, devices: int = 8) -> str:
+def run_sub(code: str, devices: int = 8, prelude: str = "") -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=480)
+    out = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=480)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 
@@ -88,6 +89,82 @@ def test_sharded_topk_bf16_wire_recall():
         hits = sum(len(set(np.asarray(i)[r]) & set(np.asarray(ie)[r]))
                    for r in range(8))
         assert hits >= 8 * 9, hits          # >=90% recall through bf16 wire
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+# shared by the tree-merge parity tests: run hierarchical_topk under
+# shard_map on the first ``s`` fake devices, tree path (static axis_sizes)
+# or all-gather oracle (axis_sizes=None), optionally with the bf16 wire
+_MERGE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.sharded import SHARD_AXIS, shard_mesh
+from repro.distributed.collectives import hierarchical_topk
+
+def merge(s, d, i, k, tree, wire=False):
+    mesh = shard_mesh(s)
+    f = jax.jit(shard_map(
+        lambda dd, ii: hierarchical_topk(
+            dd[0], ii[0], k, (SHARD_AXIS,), wire_bf16=wire,
+            tie_break_ids=True, axis_sizes=(s,) if tree else None),
+        mesh=mesh,
+        in_specs=(P(SHARD_AXIS, None, None),) * 2,
+        out_specs=(P(None, None), P(None, None)), check_rep=False))
+    spec = NamedSharding(mesh, P(SHARD_AXIS, None, None))
+    dd, ii = f(jax.device_put(jnp.asarray(d), spec),
+               jax.device_put(jnp.asarray(i), spec))
+    return np.asarray(dd), np.asarray(ii)
+"""
+
+
+def test_tree_merge_matches_allgather_oracle():
+    """Bitwise parity of the ppermute tree reduction against the
+    all-gather oracle at S in {2, 3, 4, 8} (non-power-of-two included),
+    under heavy distance ties: the two-key (dist, id) sort must make
+    both paths deterministic, identical to each other, and identical to
+    a host lexsort ground truth (ties resolve to the smallest id)."""
+    out = run_sub(prelude=_MERGE, code="""
+        rng = np.random.default_rng(0)
+        k, b = 8, 5
+        for s in (2, 3, 4, 8):
+            # integer distances from a 6-value alphabet: maximal tie
+            # pressure across shards, every value exact in bf16 too
+            d = np.sort(rng.integers(0, 6, (s, b, k)), -1).astype(np.float32)
+            i = rng.permutation(s * b * k).astype(np.int32).reshape(s, b, k)
+            td, ti = merge(s, d, i, k, True)
+            od, oi = merge(s, d, i, k, False)
+            assert (td == od).all() and (ti == oi).all(), s
+            td2, ti2 = merge(s, d, i, k, True)     # deterministic re-run
+            assert (td == td2).all() and (ti == ti2).all(), s
+            dd = d.transpose(1, 0, 2).reshape(b, -1)
+            ii = i.transpose(1, 0, 2).reshape(b, -1)
+            for r in range(b):
+                order = np.lexsort((ii[r], dd[r]))[:k]
+                assert (ti[r] == ii[r][order]).all(), (s, r)
+                assert (td[r] == dd[r][order]).all(), (s, r)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_tree_merge_bf16_wire_parity():
+    """The bf16 wire halves the per-round distance payload; with
+    bf16-exact inputs the tree must stay bitwise identical to the
+    oracle at the same wire precision AND to the fp32-wire result."""
+    out = run_sub(prelude=_MERGE, code="""
+        rng = np.random.default_rng(1)
+        k, b = 6, 4
+        for s in (3, 8):
+            d = np.sort(rng.integers(0, 5, (s, b, k)), -1).astype(np.float32)
+            i = rng.permutation(s * b * k).astype(np.int32).reshape(s, b, k)
+            td, ti = merge(s, d, i, k, True, wire=True)
+            od, oi = merge(s, d, i, k, False, wire=True)
+            assert (td == od).all() and (ti == oi).all(), s
+            fd, fi = merge(s, d, i, k, True, wire=False)
+            assert (td == fd).all() and (ti == fi).all(), s
         print("OK")
     """)
     assert "OK" in out

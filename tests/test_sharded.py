@@ -335,3 +335,95 @@ def test_shard_sweep_latency_and_capacity():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_stacked_fanout_matches_loop_bitwise():
+    """The one-dispatch stacked fan-out (core/stacked.py) against the
+    per-child Python loop it replaced, at S in {2, 3, 8} on both
+    graph-backed kinds: same keys in the same order (the loop's stable
+    shard-major tie order equals the stacked merge's two-key gid
+    order), distances to <= 1 ulp (the capacity-padded stacked dot may
+    differ from the per-child shape in summation order — the same
+    allowance the flat/ivf parity contract documents above), and
+    EXACTLY one device dispatch per ``query_batch`` regardless of
+    shard count — the ISSUE 6 acceptance assert."""
+    out = run_sub("""
+        import numpy as np
+        from repro.core import make_index, stacked
+        from repro.data.synthetic import make_corpus
+        data = make_corpus(250, 16, seed=0)
+        keys = [f"d{i}" for i in range(250)]
+        q = make_corpus(6, 16, seed=2)
+        for kind in ("hnsw", "tiered"):
+            for s in (2, 3, 8):
+                idx = make_index(kind, metric="cosine", M=8,
+                                 ef_construction=60, ef_search=48,
+                                 n_shards=s)
+                idx.bulk_insert(keys, data)
+                idx.delete("d11")        # tombstones flow into the stack
+                before = stacked.DISPATCH_COUNT
+                kq, dq = idx.query_batch(q, 5)
+                assert stacked.DISPATCH_COUNT == before + 1, (kind, s)
+                kl, dl = idx._query_batch_sharded_loop(q, 5, 48)
+                assert kq == kl, (kind, s)
+                np.testing.assert_allclose(np.asarray(dq),
+                                           np.asarray(dl),
+                                           rtol=0, atol=2.5e-7)
+                assert all("d11" not in row for row in kq)
+                # warm path: still exactly one dispatch, nothing rebuilt
+                before = stacked.DISPATCH_COUNT
+                idx.query_batch(q, 5)
+                assert stacked.DISPATCH_COUNT == before + 1, (kind, s)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_exact_block_cache_invalidation():
+    """Epoch-keyed exact-phase blocks: built once, reused with ZERO
+    per-query block uploads on the steady state, and invalidated by
+    every mutation class (delete / insert / compact) — a stale cache
+    must never serve a retracted row. Also pins the compiled-fn cache:
+    churning epochs must not grow ``_fanout_topk_fn``'s lru_cache."""
+    out = run_sub("""
+        import numpy as np
+        from repro.core import make_index, sharded
+        from repro.data.synthetic import make_corpus
+        data = make_corpus(120, 16, seed=0)
+        idx = make_index("hnsw", metric="cosine", M=8, ef_construction=60,
+                         ef_search=48, n_shards=4)
+        idx.bulk_insert([f"d{i}" for i in range(120)], data)
+        q = data[7][None] + 0.001
+        p0 = sharded.PLACE_COUNT
+        ek, _ = idx.exact_query(q, 5)
+        assert ek[0][0] == "d7"
+        assert sharded.PLACE_COUNT == p0 + 1       # one build, one upload
+        for _ in range(5):                          # steady state...
+            idx.exact_query(q, 5)
+            idx.query_batch(q, 5)
+        assert sharded.PLACE_COUNT == p0 + 1        # ...zero re-uploads
+        idx.delete("d7")
+        ek2, _ = idx.exact_query(q, 5)
+        assert "d7" not in ek2[0], "stale block cache served retracted row"
+        assert sharded.PLACE_COUNT == p0 + 2        # delete rebuilt blocks
+        idx.insert("z0", data[7])
+        ek3, _ = idx.exact_query(q, 5)
+        assert ek3[0][0] == "z0"                    # insert visible at once
+        idx.compact()
+        ek4, _ = idx.exact_query(q, 5)
+        assert ek4[0][0] == "z0" and "d7" not in ek4[0]
+        info = sharded._fanout_topk_fn.cache_info()
+        assert info.currsize <= 8, info             # no churn across epochs
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_quantize_slack_bounded():
+    """The compiled fan-out's cache key quantizes the dead-slot bound to
+    a power of two: O(log R) distinct values over any corpus growth, and
+    never below the true bound (under-fetch would drop candidates)."""
+    from repro.core.sharded import _quantize_slack
+    assert _quantize_slack(0) == 0
+    assert all(_quantize_slack(r) >= r for r in range(5000))
+    assert len({_quantize_slack(r) for r in range(5000)}) <= 15
