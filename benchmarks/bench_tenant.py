@@ -1,0 +1,114 @@
+"""Multi-tenant IndexPool benchmarks (DESIGN.md §10): what does pooling
+cost, and what does it buy?
+
+MeMemo's deployment shape is millions of *small* private corpora, so the
+interesting axes are per-tenant overheads, not raw corpus throughput:
+
+  * ``tenant_query_n<N>`` — a resident tenant's query latency through
+    the pool's slab path vs a dedicated single flat index over the same
+    rows. ``vs_single`` is the ratio (acceptance: <= 1.5x — the slab
+    gather + shared-arena top-k must stay within shouting distance of
+    the dedicated kernel);
+  * ``tenant_page_n<N>`` — evict wall time (snapshot + arena removal +
+    derived-cache drop) and restore wall time (bit-for-bit warm restore
+    adopted back into the arena), per cycle;
+  * ``tenant_multi_b<B>`` — the cross-tenant serving tick: one
+    ``query_batch_multi`` dispatch whose rows round-robin over the
+    resident tenants, vs issuing one dispatch per tenant;
+  * ``tenant_density`` — tenants/GB at the benchmark's tenant size from
+    ``arena_device_bytes()`` (slab padding included — this is the real
+    packing density, not the ideal one).
+
+Smoke mode (REPRO_BENCH_SMOKE=1) shrinks everything to a seconds-scale
+canary; CI asserts the tenant rows exist in BENCH_smoke.json and that
+``vs_single`` holds the 1.5x acceptance bound.
+"""
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _time(fn, iters):
+    fn()                                     # warm (pack + compile)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(rows: list):
+    from repro.core import IndexPool, make_index
+
+    n_tenants = 8 if SMOKE else 32
+    per_tenant = 128 if SMOKE else 1024
+    dim = 64 if SMOKE else 128
+    b, k = 16, 10
+    iters = 5 if SMOKE else 20
+
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n_tenants, per_tenant, dim)).astype(np.float32)
+    queries = rng.normal(size=(b, dim)).astype(np.float32)
+    keys = [f"d{i}" for i in range(per_tenant)]
+
+    root = tempfile.mkdtemp(prefix="bench_tenant_")
+    try:
+        pool = IndexPool(root, dim=dim, slab_rows=per_tenant)
+        for t in range(n_tenants):
+            pool.bulk_insert(f"t{t}", keys, data[t])
+
+        single = make_index("flat", dim=dim, metric="cosine")
+        single.bulk_insert(keys, data[0])
+
+        # --- resident-tenant query latency vs the dedicated index
+        dt_pool = _time(lambda: pool.query_batch("t0", queries, k=k),
+                        iters)
+        dt_single = _time(lambda: single.query_batch(queries, k=k), iters)
+        ratio = dt_pool / max(dt_single, 1e-9)
+        rows.append((f"tenant_query_n{per_tenant}", dt_pool * 1e6 / b,
+                     f"single_us={dt_single * 1e6 / b:.1f} "
+                     f"vs_single={ratio:.2f}x tenants={n_tenants}"))
+
+        # --- cross-tenant tick: ONE dispatch for a mixed batch
+        tenants = [f"t{i % n_tenants}" for i in range(b)]
+        dt_multi = _time(
+            lambda: pool.query_batch_multi(queries, tenants, k=k), iters)
+        loop_tenants = sorted(set(tenants))
+        dt_loop = _time(
+            lambda: [pool.query_batch(t, queries[:1], k=k)
+                     for t in loop_tenants], iters)
+        rows.append((f"tenant_multi_b{b}", dt_multi * 1e6 / b,
+                     f"per_tenant_loop_us={dt_loop * 1e6:.1f} "
+                     f"uniq_tenants={len(loop_tenants)}"))
+
+        # --- paging: evict + restore wall time per cycle
+        cycles = 2 if SMOKE else 5
+        pool.evict("t1")
+        pool.admit("t1")                     # warm (snapshot dirs exist)
+        ev = rs = 0.0
+        for _ in range(cycles):
+            t0 = time.perf_counter()
+            pool.evict("t1")
+            ev += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            pool.admit("t1")
+            rs += time.perf_counter() - t0
+        rows.append((f"tenant_page_n{per_tenant}",
+                     (ev + rs) * 1e6 / cycles,
+                     f"evict_ms={ev * 1e3 / cycles:.1f} "
+                     f"restore_ms={rs * 1e3 / cycles:.1f} "
+                     f"rows={per_tenant}"))
+
+        # --- packing density: tenants per GB of device arena
+        arena_bytes = pool._arena.arena_device_bytes()
+        per_gb = (1 << 30) / max(arena_bytes / n_tenants, 1)
+        rows.append(("tenant_density", 0.0,
+                     f"arena_MB={arena_bytes / 2**20:.1f} "
+                     f"tenants_per_GB={per_gb:.0f} "
+                     f"rows_per_tenant={per_tenant} dim={dim}"))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

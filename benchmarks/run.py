@@ -17,7 +17,7 @@ import sys
 import time
 
 SUITES = ["build", "query", "tiered", "rag", "serve", "store", "shard",
-          "memory", "roofline"]
+          "memory", "tenant", "roofline"]
 
 
 def main() -> None:

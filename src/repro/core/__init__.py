@@ -7,6 +7,9 @@
 # ``make_index(kind, **cfg)``. See DESIGN.md §1.
 from repro.core.index import (INDEX_KINDS, VectorIndex, make_index,
                               make_index_from_config)
+# Multi-tenant pool: many small private indexes over one shared device
+# arena, with per-tenant epochs + LRU paging. See DESIGN.md §10.
+from repro.core.tenancy import IndexPool
 
 __all__ = ["INDEX_KINDS", "VectorIndex", "make_index",
-           "make_index_from_config"]
+           "make_index_from_config", "IndexPool"]

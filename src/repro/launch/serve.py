@@ -64,6 +64,17 @@ def main():
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="auto-snapshot the store every N mutations "
                          "(0: only the final snapshot on exit)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="multi-tenant serving (DESIGN.md §10): front the "
+                         "retriever with an IndexPool of N per-tenant "
+                         "private corpora over one shared device arena. "
+                         "Requests round-robin across tenants and still "
+                         "coalesce into one retrieval dispatch per tick. "
+                         "Implies a flat per-tenant index; --store-dir "
+                         "becomes the pool root (per-tenant subdirs)")
+    ap.add_argument("--max-resident", type=int, default=64,
+                    help="with --tenants: LRU cap on arena-resident "
+                         "tenants; the rest page to their store dirs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -71,6 +82,65 @@ def main():
     params = tf.init_lm(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                          dtype=jnp.float32)
+
+    if args.rag and args.tenants > 0:
+        from repro.core import IndexPool
+        from repro.data.corpus import HashingEncoder
+        encoder = HashingEncoder()
+        pool = IndexPool(args.store_dir, dim=encoder.dim,
+                         n_shards=args.shards or 1,
+                         dtype=args.index_dtype or "fp32",
+                         max_resident=args.max_resident,
+                         snapshot_every=args.snapshot_every or None)
+        rag = RAGPipeline(encoder=encoder, index=pool,
+                          retrieval_batch=args.retrieval_batch,
+                          retrieval_cache=args.retrieval_cache)
+        tids = [f"tenant{i}" for i in range(args.tenants)]
+        for tid in tids:
+            # each tenant holds a PRIVATE copy of the corpus — keys and
+            # embeddings are namespaced, so identical texts never collide
+            try:
+                known = pool.size(tid)      # pages a durable tenant in
+            except KeyError:
+                known = 0
+            if known:
+                logger.info(f"{tid}: warm restore, {known} docs "
+                            f"@ epoch {pool.epoch(tid)}")
+                rag.register_texts(BUILTIN_CORPUS, tenant=tid)
+            else:
+                rag.add_documents(BUILTIN_CORPUS, tenant=tid)
+        queries = [["how does hnsw search work",
+                    "why is on device retrieval private",
+                    "what does efConstruction control"][i % 3]
+                   for i in range(args.requests)]
+        tenants = [tids[i % len(tids)] for i in range(args.requests)]
+        t0 = time.perf_counter()
+        outs = engine.generate_rag(rag, queries, k=3,
+                                   max_new_tokens=args.max_new,
+                                   tenants=tenants)
+        dt = time.perf_counter() - t0
+        for i, out in enumerate(outs):
+            logger.info(f"req {i} [{tenants[i]}]: retrieved "
+                        f"{[d.key for d in out['docs']]}")
+        logger.info(f"RAG[pool x{args.tenants}]: {args.requests} requests "
+                    f"in {dt:.1f}s ({args.requests / dt:.2f} req/s, "
+                    f"continuous batching)")
+        rs = rag.retriever.stats.as_dict()
+        logger.info(
+            f"retrieval: {rs['requests']} requests in {rs['searches']} "
+            f"device dispatches across {len(set(tenants))} tenants "
+            f"(cache hit rate {rs['hit_rate']:.2f})")
+        ps = pool.pool_stats()
+        logger.info(f"pool: {ps['tenants']} tenants, {ps['resident']} "
+                    f"resident, {ps['arena_rows']} arena rows in "
+                    f"{ps['slabs']} slabs ({ps['arena_bytes']} device "
+                    f"bytes), {ps['evictions']} evictions")
+        if args.store_dir:
+            pool.flush()
+            logger.info(f"pool flushed to {args.store_dir} "
+                        f"(per-tenant snapshot + WAL; next start "
+                        f"restores warm)")
+        return
 
     if args.rag:
         store = None

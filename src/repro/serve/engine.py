@@ -137,7 +137,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------ RAG path
     def generate_rag(self, pipeline, queries: list[str], *, k: int = 3,
-                     max_new_tokens: int = 16) -> list[dict]:
+                     max_new_tokens: int = 16,
+                     tenants: list[str] | None = None) -> list[dict]:
         """Serve RAG requests through the continuous-batching engine.
 
         ``pipeline`` is a RAGPipeline over any VectorIndex backend: every
@@ -145,10 +146,13 @@ class ServeEngine:
         coalesced batched ANN + result cache, DESIGN.md §6), then every
         augmented prompt is submitted at once so the slot scheduler batches
         the generation — instead of the one-request-at-a-time
-        ``pipeline.answer`` loop.
+        ``pipeline.answer`` loop. When the pipeline fronts an IndexPool,
+        ``tenants`` gives one tenant id per query; requests from different
+        tenants still coalesce into the same retrieval dispatch.
         """
         from repro.data.corpus import encode_ids
-        retrieved = pipeline.retrieve_batch(queries, k)
+        retrieved = pipeline.retrieve_batch(queries, k, tenants=tenants) \
+            if tenants is not None else pipeline.retrieve_batch(queries, k)
         prompts = [pipeline.build_prompt(q, docs)
                    for q, docs in zip(queries, retrieved)]
         reqs = []

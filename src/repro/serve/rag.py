@@ -14,6 +14,13 @@ Retrieval goes through a ``RetrievalEngine`` (serve/retrieval.py): queries
 are coalesced into power-of-two batch buckets and repeated queries hit an
 LRU cache that every mutation invalidates (DESIGN.md §6), so ``delete``
 stays privacy-safe even with caching in front of the index.
+
+Multi-tenant serving (DESIGN.md §10): construct with ``index=IndexPool(...)``
+and every data/retrieve verb takes a ``tenant`` id — each user gets a
+private corpus (documents, embeddings, AND cached results are namespaced),
+while one shared device arena and one engine serve all of them. Retrieval
+for a batch of different tenants still coalesces into one dispatch per
+tick.
 """
 from __future__ import annotations
 
@@ -74,55 +81,130 @@ class RAGPipeline:
         self.store = store or DocumentStore()
         self.template = template
         self.generate_fn = generate_fn
+        # Pool mode: the "index" is an IndexPool and every verb below takes
+        # a tenant id. Document-store text keys are namespaced the same way
+        # the pool namespaces vector keys, so two tenants' texts can never
+        # collide (or leak into each other's prompts).
+        self.pool_mode = hasattr(self.index, "query_batch_multi")
         self.retriever = RetrievalEngine(self.index,
                                          max_batch=retrieval_batch,
                                          cache_size=retrieval_cache)
 
+    def _tid(self, tenant: str | None) -> str | None:
+        if self.pool_mode:
+            if tenant is None:
+                raise ValueError(
+                    "pipeline fronts an IndexPool: pass tenant=")
+            return tenant
+        if tenant is not None:
+            raise ValueError("tenant= requires an IndexPool index")
+        return None
+
+    def _doc_key(self, key: str, tenant: str | None) -> str:
+        if tenant is None:
+            return key
+        from repro.core.tenancy import tenant_key
+        return tenant_key(tenant, key)
+
     # --------------------------------------------------------------- data
-    def add_documents(self, docs: list[tuple[str, str]]):
+    def add_documents(self, docs: list[tuple[str, str]],
+                      tenant: str | None = None):
         """docs: [(key, text)] — embed + index + store (bulk write, C3)."""
+        tenant = self._tid(tenant)
         keys = [k for k, _ in docs]
         texts = [t for _, t in docs]
         vecs = self.encoder.encode(texts)
-        self.index.bulk_insert(keys, vecs)
+        if self.pool_mode:
+            self.index.bulk_insert(tenant, keys, vecs)
+        else:
+            self.index.bulk_insert(keys, vecs)
         for k, t in docs:
-            self.store.add(k, t)
+            self.store.add(self._doc_key(k, tenant), t)
 
-    def add_document(self, key: str, text: str):
-        self.index.insert(key, self.encoder.encode(text)[0])
-        self.store.add(key, text)
+    def add_document(self, key: str, text: str, tenant: str | None = None):
+        tenant = self._tid(tenant)
+        vec = self.encoder.encode(text)[0]
+        if self.pool_mode:
+            self.index.insert(tenant, key, vec)
+        else:
+            self.index.insert(key, vec)
+        self.store.add(self._doc_key(key, tenant), text)
 
-    def register_texts(self, docs: list[tuple[str, str]]):
+    def register_texts(self, docs: list[tuple[str, str]],
+                       tenant: str | None = None):
         """Warm-restart companion to ``add_documents``: (re)populate the
         text store WITHOUT touching the index. A warm-restored index
         (``index_store=``) already holds the embeddings; re-inserting them
         would burn WAL records and epoch bumps for nothing. Only documents
         the index actually knows are registered."""
+        tenant = self._tid(tenant)
         for k, t in docs:
-            if k in self.index:
-                self.store.add(k, t)
+            known = (self.index.contains(tenant, k) if self.pool_mode
+                     else k in self.index)
+            if known:
+                self.store.add(self._doc_key(k, tenant), t)
 
-    def update_document(self, key: str, text: str):
+    def update_document(self, key: str, text: str,
+                        tenant: str | None = None):
         """Re-embed + replace an indexed document in place."""
-        self.index.update(key, self.encoder.encode(text)[0])
-        self.store.add(key, text)
+        tenant = self._tid(tenant)
+        vec = self.encoder.encode(text)[0]
+        if self.pool_mode:
+            self.index.update(tenant, key, vec)
+        else:
+            self.index.update(key, vec)
+        self.store.add(self._doc_key(key, tenant), text)
 
-    def delete_document(self, key: str):
+    def delete_document(self, key: str, tenant: str | None = None):
         """Retract a document: tombstoned in the index, purged from the
         store — it can never be retrieved into a prompt again."""
-        self.index.delete(key)
-        self.store.remove(key)
+        tenant = self._tid(tenant)
+        if self.pool_mode:
+            self.index.delete(tenant, key)
+        else:
+            self.index.delete(key)
+        self.store.remove(self._doc_key(key, tenant))
 
     # ------------------------------------------------------------ retrieve
-    def retrieve(self, query: str, k: int = 3) -> list[RetrievedDoc]:
-        return self.retrieve_batch([query], k)[0]
+    def retrieve(self, query: str, k: int = 3,
+                 tenant: str | None = None) -> list[RetrievedDoc]:
+        tenants = None if tenant is None else [tenant]
+        return self.retrieve_batch([query], k, tenants=tenants)[0]
 
-    def retrieve_batch(self, queries: list[str], k: int = 3
+    def retrieve_batch(self, queries: list[str], k: int = 3,
+                       tenants: list[str] | None = None
                        ) -> list[list[RetrievedDoc]]:
         """Retrieve for many queries in ONE RetrievalEngine tick: a single
         encode pass, then one bucket-coalesced device search per (k, ef)
         group — the serving path ``ServeEngine.generate_rag`` uses for all
-        of its active slots."""
+        of its active slots. In pool mode ``tenants`` gives one tenant id
+        per query; different tenants still coalesce into the same dispatch."""
+        if self.pool_mode:
+            if tenants is None or len(tenants) != len(queries):
+                raise ValueError(
+                    "pool mode: pass tenants= (one id per query)")
+            # Queries against empty (or fully retracted) tenants yield no
+            # context; only live tenants go to the engine.
+            sizes = [self.index.size(t) for t in tenants]
+            live = [i for i, s in enumerate(sizes) if s > 0]
+            out: list[list[RetrievedDoc]] = [[] for _ in queries]
+            if not live:
+                return out
+            qv = self.encoder.encode([queries[i] for i in live])
+            reqs = self.retriever.retrieve(
+                qv, k=min(k, max(sizes[i] for i in live)),
+                tenants=[tenants[i] for i in live])
+            for i, r in zip(live, reqs):
+                out[i] = [RetrievedDoc(
+                              key,
+                              self.store.get(
+                                  self._doc_key(key, tenants[i])).text,
+                              float(d))
+                          for key, d in zip(r.keys, r.dists)
+                          if key is not None]
+            return out
+        if tenants is not None:
+            raise ValueError("tenants= requires an IndexPool index")
         if self.index.size == 0:           # everything retracted: no context
             return [[] for _ in queries]
         qv = self.encoder.encode(list(queries))
@@ -139,8 +221,9 @@ class RAGPipeline:
                 .replace("{{user}}", query))
 
     # ------------------------------------------------------------ generate
-    def answer(self, query: str, k: int = 3) -> dict:
-        docs = self.retrieve(query, k)
+    def answer(self, query: str, k: int = 3,
+               tenant: str | None = None) -> dict:
+        docs = self.retrieve(query, k, tenant=tenant)
         prompt = self.build_prompt(query, docs)
         out = self.generate_fn(prompt) if self.generate_fn else None
         return {"query": query, "docs": docs, "prompt": prompt,

@@ -22,18 +22,31 @@ one compiled dispatch. ``RetrievalEngine`` closes that gap:
     GLOBAL ``mutation_epoch`` (sharded backends mirror every per-shard
     epoch delta onto the outer index), so the whole LRU drops exactly
     as it would on a single device;
-  * an **LRU result cache** keyed on (query-vector hash, k, ef) serves
-    repeats without touching the device. The cache is validated against the
-    index's ``mutation_epoch``: every insert/update/delete bumps the epoch
-    and drops the whole cache, so a retracted document can never be served
-    from a stale entry — deletion stays the paper's first-class privacy
-    operation even with caching in front of the index (DESIGN.md §6).
+  * an **LRU result cache** keyed on (tenant, query-vector hash, k, ef)
+    serves repeats without touching the device. The tenant dimension is
+    load-bearing isolation (DESIGN.md §10): two tenants submitting the
+    IDENTICAL query vector must never share a cached result — their
+    corpora differ — so the key carries the tenant id (None for a
+    single-index engine, where the index identity is fixed per engine).
+    The cache is validated against the index's ``mutation_epoch``: every
+    insert/update/delete bumps the epoch and drops the cache, so a
+    retracted document can never be served from a stale entry — deletion
+    stays the paper's first-class privacy operation even with caching in
+    front of the index (DESIGN.md §6). Fronting an ``IndexPool`` the
+    validation is PER TENANT (``pool.epoch(tid)``): one user's delete
+    drops only their entries, everyone else keeps their hits.
     The epoch is durable: a store-backed index (DESIGN.md §7) restores at
     the exact epoch it died at, and the engine adopts it at construction
     (``_cache_epoch = index.mutation_epoch``) — never assume epoch 0 —
     so cache-validity semantics survive process restarts, and an in-place
     ``compact()`` (which bumps the epoch) flushes the cache like any other
     mutation.
+
+Fronting an :class:`repro.core.tenancy.IndexPool` (detected by its
+``query_batch_multi``), every ``submit`` carries a ``tenant`` id and each
+per-(k, ef) tick group runs as ONE cross-tenant dispatch — per-tick
+coalescing batches queries across tenants where the slab layout allows
+(rows group device-side by padded slab width).
 
 Typical use (this is what ``RAGPipeline``/``ServeEngine.generate_rag`` do):
 
@@ -78,6 +91,7 @@ class RetrievalRequest:
     query: np.ndarray                 # [D] f32 (contiguous; hashed for cache)
     k: int
     ef: int | None = None
+    tenant: str | None = None         # IndexPool namespace (None = single)
     keys: list | None = None          # k entries, None-padded (DESIGN.md §1)
     dists: np.ndarray | None = None   # [k] f32, INF-padded
     done: bool = False
@@ -121,6 +135,10 @@ class RetrievalEngine:
         if max_batch < 1 or max_batch & (max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, got {max_batch}")
         self.index = index
+        # IndexPool front-end (DESIGN.md §10): requests carry a tenant id,
+        # dispatches go through query_batch_multi, and cache validity is
+        # tracked per tenant instead of one global epoch.
+        self._multi = hasattr(index, "query_batch_multi")
         self.shards = getattr(index, "shard_count", 1)
         # codec transparency (DESIGN.md §9): the engine never touches the
         # row encoding — query_batch returns decoded results and every
@@ -133,17 +151,29 @@ class RetrievalEngine:
         self.queue: collections.deque[RetrievalRequest] = collections.deque()
         self.stats = RetrievalStats()
         self._next_rid = 0
-        # LRU: (qhash, k, ef) -> (keys, dists); valid only for _cache_epoch
+        # LRU: (tenant, qhash, dim, k, ef) -> (keys, dists); an entry is
+        # valid only for the epoch its tenant (or the whole index, when
+        # tenant is None) was at when it was stored
         self._cache: "collections.OrderedDict[tuple, tuple]" = \
             collections.OrderedDict()
         self._cache_epoch = index.mutation_epoch
+        self._tenant_epochs: dict[str, int] = {}
 
     # ------------------------------------------------------------- intake
-    def submit(self, query, k: int = 10, ef: int | None = None
-               ) -> RetrievalRequest:
-        """Enqueue one query vector; returns a handle resolved by ``step``."""
+    def submit(self, query, k: int = 10, ef: int | None = None,
+               tenant: str | None = None) -> RetrievalRequest:
+        """Enqueue one query vector; returns a handle resolved by ``step``.
+        Fronting an ``IndexPool``, ``tenant`` is REQUIRED (there is no
+        un-namespaced corpus to search); on a plain index it is
+        rejected (the backend cannot route it)."""
+        if self._multi and tenant is None:
+            raise ValueError("this engine fronts an IndexPool: "
+                             "submit(..., tenant=...) is required")
+        if not self._multi and tenant is not None:
+            raise ValueError(f"tenant={tenant!r} needs an IndexPool index; "
+                             f"{type(self.index).__name__} is single-tenant")
         q = np.ascontiguousarray(np.asarray(query, np.float32).reshape(-1))
-        r = RetrievalRequest(self._next_rid, q, int(k), ef)
+        r = RetrievalRequest(self._next_rid, q, int(k), ef, tenant)
         self._next_rid += 1
         self.stats.requests += 1
         self.queue.append(r)
@@ -152,13 +182,33 @@ class RetrievalEngine:
     # -------------------------------------------------------------- cache
     @staticmethod
     def _cache_key(r: RetrievalRequest) -> tuple:
+        """Cache identity of one request. The leading tenant component is
+        the isolation boundary (DESIGN.md §10): identical query bytes
+        under two tenants are two DIFFERENT entries, and per-tenant
+        invalidation drops exactly the keys whose first component
+        matches. (The index itself is engine-fixed, so the tenant id is
+        the whole index-identity dimension of the key.)"""
         h = hashlib.blake2b(r.query.tobytes(), digest_size=16)
-        return (h.digest(), r.query.shape[0], r.k, r.ef)
+        return (r.tenant, h.digest(), r.query.shape[0], r.k, r.ef)
 
     def _check_epoch(self) -> None:
-        """Drop every cached result if the index mutated since it was
+        """Drop cached results whose index state mutated since they were
         stored. delete() bumping the epoch is the privacy guarantee: a
-        retracted document cannot be served from cache (DESIGN.md §6)."""
+        retracted document cannot be served from cache (DESIGN.md §6).
+        On an ``IndexPool`` the check is per tenant: tenant A's delete
+        drops A's entries and ONLY A's — B's hits survive."""
+        if self._multi:
+            for tid, known in list(self._tenant_epochs.items()):
+                cur = self.index.epoch(tid)
+                if cur != known:
+                    dropped = [ck for ck in self._cache if ck[0] == tid]
+                    for ck in dropped:
+                        del self._cache[ck]
+                    if dropped:
+                        self.stats.invalidations += 1
+                    self._tenant_epochs[tid] = cur
+            self._cache_epoch = self.index.mutation_epoch
+            return
         ep = self.index.mutation_epoch
         if ep != self._cache_epoch:
             if self._cache:
@@ -264,7 +314,16 @@ class RetrievalEngine:
             # sliced off below, and the compiled shape stays on the ladder
             q = np.concatenate([q, np.repeat(q[:1], bucket - n, axis=0)])
         kw = {} if ef is None else {"ef": ef}
-        keys, dists = self.index.query_batch(q, k=k, **kw)
+        if self._multi:
+            # cross-tenant coalescing (DESIGN.md §10): the whole group —
+            # rows of DIFFERENT tenants — goes down as one dispatch;
+            # padding rows replicate row 0's tenant along with its query
+            tenants = [r.tenant for r in reqs] \
+                + [reqs[0].tenant] * (bucket - n)
+            keys, dists = self.index.query_batch_multi(q, tenants, k=k,
+                                                       **kw)
+        else:
+            keys, dists = self.index.query_batch(q, k=k, **kw)
         dists = np.asarray(dists)
         self.stats.searches += 1
         self.stats.searched_queries += n
@@ -273,6 +332,12 @@ class RetrievalEngine:
             r.keys, r.dists = list(row_keys), np.asarray(row_d)
             r.done = True
             self._cache_put(r._ck, r.keys, r.dists)
+            if self._multi:
+                # record validity at store time: mutations cannot
+                # interleave mid-tick (single-threaded), so the tenant's
+                # current epoch IS the epoch the search ran at
+                self._tenant_epochs.setdefault(r.tenant,
+                                               self.index.epoch(r.tenant))
         return n
 
     # ---------------------------------------------------------- frontends
@@ -282,17 +347,24 @@ class RetrievalEngine:
             self.step()
             ticks += 1
 
-    def retrieve(self, queries, k: int = 10, ef: int | None = None
-                 ) -> list[RetrievalRequest]:
+    def retrieve(self, queries, k: int = 10, ef: int | None = None,
+                 tenants=None) -> list[RetrievalRequest]:
         """Batch convenience: submit all rows of [B, D], drain, return the
-        resolved requests in submission order."""
+        resolved requests in submission order. ``tenants`` is one tenant
+        id for the whole batch or a per-row list (IndexPool only)."""
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
             q = q[None]
-        reqs = [self.submit(row, k=k, ef=ef) for row in q]
+        if tenants is None or isinstance(tenants, str):
+            tenants = [tenants] * q.shape[0]
+        if len(tenants) != q.shape[0]:
+            raise ValueError("queries/tenants length mismatch")
+        reqs = [self.submit(row, k=k, ef=ef, tenant=t)
+                for row, t in zip(q, tenants)]
         self.run_until_drained()
         return reqs
 
-    def retrieve_one(self, query, k: int = 10, ef: int | None = None
-                     ) -> RetrievalRequest:
-        return self.retrieve(np.asarray(query, np.float32)[None], k, ef)[0]
+    def retrieve_one(self, query, k: int = 10, ef: int | None = None,
+                     tenant: str | None = None) -> RetrievalRequest:
+        return self.retrieve(np.asarray(query, np.float32)[None], k, ef,
+                             tenants=tenant)[0]

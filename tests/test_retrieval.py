@@ -281,3 +281,38 @@ def test_rag_pipeline_retrieve_batch_single_tick():
     rag.delete_document(top)
     docs2 = rag.retrieve(queries[0], k=2)
     assert all(d.key != top for d in docs2)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant pool: the cache key carries the tenant (regression)
+# ---------------------------------------------------------------------------
+def test_cache_key_includes_tenant_identity():
+    """Regression: the LRU key used to be (query-hash, B, k, ef) only, so
+    two tenants issuing the SAME query would share one cached result —
+    tenant B served tenant A's documents. The key now carries the tenant
+    id, so identical queries from different tenants are distinct entries."""
+    from repro.core import IndexPool
+
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(8, 16)).astype(np.float32)
+    pool = IndexPool(dim=16)
+    pool.bulk_insert("alice", [f"a{i}" for i in range(4)], data[:4])
+    pool.bulk_insert("bob", [f"b{i}" for i in range(4)], data[4:])
+    eng = RetrievalEngine(pool, max_batch=8)
+    first = eng.retrieve_one(data[0], k=2, tenant="alice")
+    assert first.keys[0] == "a0"
+    # same query bytes, other tenant: with the old key this was a cache
+    # hit serving alice's documents to bob
+    other = eng.retrieve_one(data[0], k=2, tenant="bob")
+    assert not other.from_cache
+    assert all(k.startswith("b") for k in other.keys)
+    # same tenant + same query IS still a hit
+    again = eng.retrieve_one(data[0], k=2, tenant="alice")
+    assert again.from_cache and again.keys == first.keys
+    # a pool without a tenant id (or a tenant id on a plain index) is
+    # rejected outright rather than risking a shared entry
+    with pytest.raises(ValueError, match="tenant"):
+        eng.submit(data[0], k=2)
+    plain = RetrievalEngine(build("flat")[0], max_batch=8)
+    with pytest.raises(ValueError, match="tenant"):
+        plain.submit(data[0], k=2, tenant="alice")
