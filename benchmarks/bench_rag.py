@@ -1,5 +1,26 @@
 """RAG Playground end-to-end (paper §2): encode -> retrieve -> prompt ->
-generate, measuring per-stage latency with the smoke LM."""
+generate, measuring per-stage latency with the smoke LM — plus the
+overlapped serving loop (DESIGN.md §11) at slot counts {1, 4, 8}.
+
+Rows:
+  rag_index_12_docs       embed + index + store the builtin corpus
+  rag_retrieve_top3       one warm retrieval through the RetrievalEngine
+  rag_answer_e2e          single-request answer(): retrieve -> prompt ->
+                          generate (the paper's sequential loop)
+  rag_e2e_slots{1,4,8}    closed-loop submit_rag serving: per-request
+                          latency, with req_per_s / overlap_ratio /
+                          occupancy in the detail column. Requests arrive
+                          closed-loop (2*slots outstanding), so late
+                          arrivals' ANN searches run behind in-flight
+                          decode dispatches — req/s should grow with
+                          slots, and overlap_ratio > 0 shows retrieval
+                          actually hiding behind decode.
+
+Smoke mode (REPRO_BENCH_SMOKE=1, set by ``benchmarks/run.py --smoke``)
+shrinks request counts and generation budgets so CI can assert the
+slot-scaling shape in seconds.
+"""
+import os
 import time
 
 import jax
@@ -11,8 +32,10 @@ from repro.models import transformer as tf
 from repro.serve.engine import ServeEngine
 from repro.serve.rag import RAGPipeline, lm_generate_fn
 
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
-def run(rows: list):
+
+def _pipeline_stages(rows: list):
     cfg = get_smoke_config("llama3-8b")
     params = tf.init_lm(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(params, cfg, slots=2, max_len=128,
@@ -33,3 +56,61 @@ def run(rows: list):
     out = rag.answer(q, k=3)
     rows.append(("rag_answer_e2e", (time.perf_counter() - t0) * 1e6,
                  f"resp_tokens={len(out['response'].split())}"))
+
+
+def _drive_closed_loop(eng, queries, *, window, max_new):
+    """Submit closed-loop (keep ``window`` requests outstanding) and tick
+    until drained; returns (requests, wall seconds)."""
+    pend = list(queries)
+    live = []
+    t0 = time.perf_counter()
+    while pend or eng._work_pending():
+        while pend and sum(not r.done for r in live) < window:
+            live.append(eng.submit_rag(pend.pop(0), k=3,
+                                       max_new_tokens=max_new))
+        eng.step()
+    dt = time.perf_counter() - t0
+    eng.poll()
+    return live, dt
+
+
+def _overlapped_e2e(rows: list):
+    """Closed-loop serving throughput vs slot count: the tentpole row.
+    Unique queries per request keep the LRU cache out of the picture —
+    every request pays a real ANN search, and the engine has to hide it
+    behind decode ticks to scale. A full untimed pass (distinct query
+    strings, same shape structure) warms each engine's prefill/decode
+    compiles first, so the timed pass measures serving, not XLA."""
+    from repro.serve.engine import EngineStats
+
+    cfg = get_smoke_config("llama3-8b")
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    reqs = 20 if SMOKE else 32
+    max_new = 3 if SMOKE else 8
+    topics = ["hnsw graph search", "on device privacy", "document store",
+              "vector distance", "flat scan cost", "delete retraction"]
+    for slots in (1, 4, 8):
+        rag = RAGPipeline(index_kind="hnsw")
+        rag.add_documents(BUILTIN_CORPUS)
+        eng = ServeEngine(params, cfg, pipeline=rag, slots=slots,
+                          max_len=96, dtype=jnp.float32)
+        window = 2 * slots
+        _drive_closed_loop(
+            eng, [f"{topics[i % len(topics)]} warm {i}" for i in range(reqs)],
+            window=window, max_new=max_new)
+        eng.stats = EngineStats(slots=slots)        # timed pass only
+        live, dt = _drive_closed_loop(
+            eng, [f"{topics[i % len(topics)]} variant {i}"
+                  for i in range(reqs)],
+            window=window, max_new=max_new)
+        assert all(r.done and r.docs for r in live)
+        s = eng.stats.as_dict()
+        rows.append((f"rag_e2e_slots{slots}", dt / reqs * 1e6,
+                     f"req_per_s={reqs / dt:.2f} "
+                     f"overlap_ratio={s['overlap_ratio']:.2f} "
+                     f"occupancy={s['slot_occupancy']:.2f}"))
+
+
+def run(rows: list):
+    _pipeline_stages(rows)
+    _overlapped_e2e(rows)

@@ -8,9 +8,9 @@ Rows:
                                speedup over the per-query baseline (hnsw)
   retrieval_flat_B32           same harness over the exact flat backend
   retrieval_B32_cached         repeat workload served from the LRU cache
-  retrieval_rag_e2e            generate_rag end-to-end: one retrieval tick
-                               (with in-tick dedup hit rate) followed by
-                               slot-batched generation
+  retrieval_rag_e2e            generate_rag shim end-to-end: rides the
+                               overlapped serving loop (bench_rag's
+                               rag_e2e_slots* rows sweep it closed-loop)
 
 Smoke mode (REPRO_BENCH_SMOKE=1, set by ``benchmarks/run.py --smoke``)
 shrinks every size so the whole file runs in seconds — enough to catch
@@ -128,10 +128,10 @@ def _retrieval_serving(rows: list):
 
 
 def _rag_e2e(rows: list):
-    """generate_rag end-to-end: ONE retrieval tick for the whole request
-    batch (bucket coalescing + in-tick dedup), then slot-batched
-    generation. Sequential by design — the retrieval cost disappears into
-    a single dispatch before decoding starts."""
+    """generate_rag (compat shim) end-to-end: the whole batch is submitted
+    up front, so retrieval coalesces into one early tick and generation
+    is slot-batched — kept as the open-loop burst reference point next to
+    bench_rag's closed-loop rag_e2e_slots* rows."""
     from repro.data.corpus import BUILTIN_CORPUS
     from repro.serve.rag import RAGPipeline
 

@@ -16,7 +16,7 @@ if [[ "${1:-}" == "--smoke" ]]; then
   shift
   out="${SMOKE_JSON:-bench-results/BENCH_smoke.json}"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    exec python -m benchmarks.run --only query,serve,store,shard,memory,tenant \
+    exec python -m benchmarks.run --only query,serve,store,shard,memory,tenant,rag \
       --smoke --json "$out" "$@"
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -8,14 +8,20 @@ KV head (static loop, G query heads per KV head).
 Shapes / dtypes
   q        [B, H, Dh]       any float (cast to f32 for scores)
   k, v     [B, S, KVH, Dh]  any float; H = G * KVH (GQA groups)
-  cur_len  scalar i32       live prefix length; positions >= cur_len are
-                            masked (cache slots are capacity-padded)
+  cur_len  i32 scalar or [B]  live prefix length; positions >= cur_len are
+                            masked (cache slots are capacity-padded). The
+                            [B] form is the continuous-batching contract
+                            (DESIGN.md §11): every serving slot carries its
+                            OWN position, so one dispatch decodes slots at
+                            different depths — admissions/evictions never
+                            change the compiled shape, only the mask.
   ->       out [B, H, Dh] f32
 
 Grid / block layout
   grid = (B, S / block_s); program (i, j) loads query row i (VMEM) and KV
   tile j [1, block_s, KVH, Dh] (BlockSpec-pipelined). cur_len sits in
-  SMEM. Scratch m/l [H, 1] + acc [H, Dh] carry the online softmax across
+  SMEM as a [B] vector; program (i, j) reads its own row's length.
+  Scratch m/l [H, 1] + acc [H, Dh] carry the online softmax across
   the j axis (sequential grid dim on TPU); tile 0 initialises them, the
   last tile writes acc / l. block_s is shrunk to divide S.
 
@@ -40,6 +46,7 @@ NEG = -1e30   # plain float: pallas kernels must not capture traced constants
 
 def _kernel(st: int, kvh: int, g: int, cur_ref, q_ref, k_ref, v_ref, out_ref,
             m_sc, l_sc, acc_sc):
+    i = pl.program_id(0)
     j = pl.program_id(1)
     nj = pl.num_programs(1)
     dh = q_ref.shape[2]
@@ -55,7 +62,7 @@ def _kernel(st: int, kvh: int, g: int, cur_ref, q_ref, k_ref, v_ref, out_ref,
     vt = v_ref[0]
     q = q_ref[0]                                    # [H, Dh]
     pos = j * st + jax.lax.broadcasted_iota(jnp.int32, (1, st), 1)[0]
-    valid = pos < cur_ref[0]                        # [st]
+    valid = pos < cur_ref[i]                        # [st]; per-sequence length
 
     for h in range(kvh):
         sl = slice(h * g, (h + 1) * g)
@@ -87,14 +94,17 @@ def _kernel(st: int, kvh: int, g: int, cur_ref, q_ref, k_ref, v_ref, out_ref,
 def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                         cur_len: jax.Array, *, block_s: int = 512,
                         interpret: bool = True) -> jax.Array:
-    """q [B,H,Dh]; k,v [B,S,KVH,Dh]; cur_len scalar int32 -> [B,H,Dh] f32."""
+    """q [B,H,Dh]; k,v [B,S,KVH,Dh]; cur_len scalar or [B] i32 -> [B,H,Dh] f32."""
     b, h, dh = q.shape
     s, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     block_s = min(block_s, s)
     while s % block_s:
         block_s -= 1
-    cur = jnp.asarray(cur_len, jnp.int32).reshape(1)
+    # scalar cur_len broadcasts to one length per batch row; [B] passes
+    # through — every slot masks at its own depth (one compiled shape)
+    cur = jnp.broadcast_to(
+        jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
 
     grid = (b, s // block_s)
     return pl.pallas_call(

@@ -83,7 +83,12 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
 
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  cur_len) -> jax.Array:
-    """Decode attention: q [B,H,Dh], k/v [B,S,KVH,Dh] -> [B,H,Dh]."""
+    """Decode attention: q [B,H,Dh], k/v [B,S,KVH,Dh] -> [B,H,Dh] f32.
+
+    ``cur_len`` is a scalar or a per-sequence [B] vector of live prefix
+    lengths — the serving hot loop (``models/transformer.decode_step``)
+    passes [B] so one dispatch decodes continuous-batching slots at
+    different depths (DESIGN.md §11)."""
     use, interp = _use_pallas()
     if use:
         from repro.kernels.flash_decode import flash_decode_pallas

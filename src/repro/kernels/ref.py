@@ -63,13 +63,18 @@ def embedding_bag_ref(table: jax.Array, ids: jax.Array,
 
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      cur_len: jax.Array) -> jax.Array:
-    """q [B,H,Dh]; k,v [B,S,KVH,Dh]; mask pos >= cur_len -> out [B,H,Dh]."""
+    """q [B,H,Dh]; k,v [B,S,KVH,Dh]; mask pos >= cur_len -> out [B,H,Dh].
+
+    ``cur_len`` is a scalar or [B] (continuous batching: each serving
+    slot masks at its own depth within one dispatch)."""
     b, h, dh = q.shape
     s, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     qg = q.reshape(b, kvh, g, dh).astype(jnp.float32) * dh ** -0.5
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
-    mask = jnp.arange(s)[None, None, None, :] < cur_len
+    cur = jnp.broadcast_to(
+        jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
+    mask = jnp.arange(s)[None, None, None, :] < cur[:, None, None, None]
     scores = jnp.where(mask, scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))

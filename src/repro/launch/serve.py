@@ -1,8 +1,15 @@
 """End-to-end serving driver: continuous-batching LM serving (optionally
-with RAG augmentation).
+with RAG augmentation, retrieval overlapped behind the decode loop).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
         --requests 12 --max-new 16 [--rag]
+
+RAG requests arrive closed-loop (a bounded window of outstanding
+requests is kept topped up, like real traffic) and ride the engine's
+tick state machine: late arrivals' ANN searches run behind the decode
+dispatches of earlier requests (DESIGN.md §11) — the run reports
+``overlap_ratio`` (fraction of retrieval ticks hidden behind decode)
+and ``slot_occupancy`` alongside req/s.
 """
 from __future__ import annotations
 
@@ -26,6 +33,37 @@ def _power_of_two(v: str) -> int:
     if n < 1 or n & (n - 1):
         raise argparse.ArgumentTypeError(f"{v} is not a power of two")
     return n
+
+
+def _serve_closed_loop(engine, queries, tenants, *, k, max_new):
+    """Drive the engine closed-loop: keep up to 2*slots requests
+    outstanding so retrieval for late arrivals overlaps decode ticks
+    already running (an open-loop burst would retrieve everything on
+    tick 1 with nothing to hide behind)."""
+    window = 2 * engine.slots
+    pend = list(zip(queries, tenants))
+    reqs = []
+    t0 = time.perf_counter()
+    while pend or engine._work_pending():
+        while pend and sum(not r.done for r in reqs) < window:
+            q, t = pend.pop(0)
+            reqs.append(engine.submit_rag(q, k=k, tenant=t,
+                                          max_new_tokens=max_new))
+        engine.step()
+    dt = time.perf_counter() - t0
+    engine.poll()
+    return reqs, dt
+
+
+def _log_engine_stats(engine):
+    s = engine.stats.as_dict()
+    logger.info(
+        f"engine: {s['ticks']} ticks ({s['decode_ticks']} decode, "
+        f"{s['prefills']} prefills), overlap_ratio "
+        f"{s['overlap_ratio']:.2f} ({s['overlapped_ticks']}/"
+        f"{s['retrieval_ticks']} retrieval ticks hidden behind decode), "
+        f"slot_occupancy {s['slot_occupancy']:.2f}, "
+        f"{s['re_retrievals']} epoch-guard re-retrievals")
 
 
 def main():
@@ -75,13 +113,23 @@ def main():
     ap.add_argument("--max-resident", type=int, default=64,
                     help="with --tenants: LRU cap on arena-resident "
                          "tenants; the rest page to their store dirs")
+    ap.add_argument("--sampler", default="greedy",
+                    choices=("greedy", "temperature"),
+                    help="token sampler; temperature draws fold (request, "
+                         "position) into --seed, so output is independent "
+                         "of the admission schedule")
+    ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = tf.init_lm(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                         dtype=jnp.float32)
+
+    def build_engine(pipeline=None):
+        return ServeEngine(params, cfg, pipeline=pipeline, slots=args.slots,
+                           max_len=args.max_len, dtype=jnp.float32,
+                           sampler=args.sampler,
+                           temperature=args.temperature, seed=args.seed)
 
     if args.rag and args.tenants > 0:
         from repro.core import IndexPool
@@ -109,22 +157,21 @@ def main():
                 rag.register_texts(BUILTIN_CORPUS, tenant=tid)
             else:
                 rag.add_documents(BUILTIN_CORPUS, tenant=tid)
+        engine = build_engine(rag)
         queries = [["how does hnsw search work",
                     "why is on device retrieval private",
                     "what does efConstruction control"][i % 3]
                    for i in range(args.requests)]
         tenants = [tids[i % len(tids)] for i in range(args.requests)]
-        t0 = time.perf_counter()
-        outs = engine.generate_rag(rag, queries, k=3,
-                                   max_new_tokens=args.max_new,
-                                   tenants=tenants)
-        dt = time.perf_counter() - t0
-        for i, out in enumerate(outs):
-            logger.info(f"req {i} [{tenants[i]}]: retrieved "
-                        f"{[d.key for d in out['docs']]}")
+        reqs, dt = _serve_closed_loop(engine, queries, tenants, k=3,
+                                      max_new=args.max_new)
+        for i, r in enumerate(reqs):
+            logger.info(f"req {i} [{r.tenant}]: retrieved "
+                        f"{[d.key for d in r.docs]}")
         logger.info(f"RAG[pool x{args.tenants}]: {args.requests} requests "
                     f"in {dt:.1f}s ({args.requests / dt:.2f} req/s, "
-                    f"continuous batching)")
+                    f"overlapped continuous batching)")
+        _log_engine_stats(engine)
         rs = rag.retriever.stats.as_dict()
         logger.info(
             f"retrieval: {rs['requests']} requests in {rs['searches']} "
@@ -170,18 +217,20 @@ def main():
             rag.register_texts(BUILTIN_CORPUS)
         else:
             rag.add_documents(BUILTIN_CORPUS)
+        engine = build_engine(rag)
         queries = [["how does hnsw search work",
                     "why is on device retrieval private",
                     "what does efConstruction control"][i % 3]
                    for i in range(args.requests)]
-        t0 = time.perf_counter()
-        outs = engine.generate_rag(rag, queries, k=3,
-                                   max_new_tokens=args.max_new)
-        dt = time.perf_counter() - t0
-        for i, out in enumerate(outs):
-            logger.info(f"req {i}: retrieved {[d.key for d in out['docs']]}")
+        reqs, dt = _serve_closed_loop(engine, queries,
+                                      [None] * len(queries), k=3,
+                                      max_new=args.max_new)
+        for i, r in enumerate(reqs):
+            logger.info(f"req {i}: retrieved {[d.key for d in r.docs]}")
         logger.info(f"RAG[{args.index}]: {args.requests} requests in {dt:.1f}s "
-                    f"({args.requests / dt:.2f} req/s, continuous batching)")
+                    f"({args.requests / dt:.2f} req/s, overlapped "
+                    f"continuous batching)")
+        _log_engine_stats(engine)
         rs = rag.retriever.stats.as_dict()
         logger.info(
             f"retrieval: {rs['requests']} requests in {rs['searches']} device "
@@ -195,6 +244,7 @@ def main():
                         f"restores warm)")
         return
 
+    engine = build_engine()
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(4, 24))
                for _ in range(args.requests)]

@@ -391,11 +391,28 @@ def prefill(params: dict, cfg: LMConfig, tokens: jax.Array,
 
 
 def decode_step(params: dict, cfg: LMConfig, token: jax.Array,
-                cache: KVCache, dtype=jnp.bfloat16
+                cache: KVCache, dtype=jnp.bfloat16,
+                attn_impl: str = "flash"
                 ) -> tuple[jax.Array, KVCache]:
     """token [B,1] int32 -> (logits [B,1,V], updated cache). One new token
     per sequence; every slot advances its own ``cur_len`` (continuous
-    batching)."""
+    batching).
+
+    ``attn_impl`` selects the decode-attention hot loop:
+      "flash" (default) — ``kernels/ops.flash_decode``: the split-K Pallas
+        flash-decode kernel on TPU, its jnp oracle elsewhere. Takes the
+        per-sequence ``cur_len`` vector, so one compiled dispatch serves
+        slots at different depths — shape-stable across admissions and
+        evictions (DESIGN.md §11).
+      "dense" — ``models/attention.decode_attention``: the sharding-
+        annotated jnp path (KV-sequence sharding lowers its reductions to
+        all-reduces; use under a mesh with a sharded cache).
+    Both compute the same masked softmax attention in f32; decode_step
+    output is parity-tested between them (tests/test_transformer.py).
+    """
+    if attn_impl not in ("flash", "dense"):
+        raise ValueError(f"unknown attn_impl {attn_impl!r}; "
+                         "expected 'flash' or 'dense'")
     B = token.shape[0]
     Sc = cache.k.shape[2]
     x = _embed(params, cfg, token, dtype)
@@ -430,7 +447,12 @@ def decode_step(params: dict, cfg: LMConfig, token: jax.Array,
         kc = jax.lax.dynamic_update_index_in_dim(kc, k_l, li, 0)
         vc = jax.lax.dynamic_update_index_in_dim(vc, v_l, li, 0)
         n_valid = jnp.minimum(pos + 1, Sc)
-        attn = decode_attention(q, k_att, v_att, n_valid)
+        if attn_impl == "flash":
+            from repro.kernels import ops
+            a = ops.flash_decode(q[:, 0], k_att, v_att, n_valid)
+            attn = a.astype(x.dtype)[:, None]          # [B,1,H,Dh]
+        else:
+            attn = decode_attention(q, k_att, v_att, n_valid)
         x = x + _attn_out(lp, cfg, attn)
         x, _ = _ffn(lp, cfg, x)
         return (x, kc, vc, ksc, vsc, li + 1), None

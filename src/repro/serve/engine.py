@@ -1,16 +1,39 @@
-"""KV-cache serving engine with slot-based continuous batching.
+"""KV-cache serving engine: slot-based continuous batching with retrieval
+overlapped behind the decode loop (DESIGN.md §11).
 
-A fixed pool of B slots decodes in lock step (one jitted ``decode_step`` per
-engine tick serves every active slot); requests join free slots after a
-batched prefill and leave on EOS/max-tokens, at which point queued requests
-are admitted — vLLM-style continuous batching restricted to fixed shapes
-(TPU-friendly: no recompilation as load changes).
+A fixed pool of B slots decodes in lock step (one jitted ``decode_step``
+per engine tick serves every active slot through the flash-decode kernel
+path); requests join free slots after a batched prefill and leave on
+EOS/max-tokens, at which point queued requests are admitted — vLLM-style
+continuous batching restricted to fixed shapes (TPU-friendly: no
+recompilation as load changes).
+
+RAG requests are first-class (:class:`RagRequest`): ``submit_rag`` enters
+them into a tick state machine
+
+    QUEUED -> RETRIEVING -> READY -> ACTIVE -> DONE
+
+whose RETRIEVING stage runs on the already-async ``RetrievalEngine``
+*behind* the in-flight decode dispatch: each tick the engine (1) submits
+newly queued retrievals, (2) admits retrieval-completed requests into
+free slots (batched prefill of the augmented prompt), (3) dispatches one
+decode token for every active slot, and (4) pumps one retrieval
+coalescing tick in the window between the decode dispatch and its
+materialization — so retrieval latency for queued requests hides behind
+decode compute and end-to-end req/s scales with ``slots`` instead of
+paying retrieve-then-generate serially per batch (the sequential barrier
+the old ``generate_rag`` was).
+
+Privacy under overlap: a prompt is only ever built from retrieval
+results whose mutation epoch is still current at admission — if a
+document is retracted while a request waits in READY, the request is
+sent back to RETRIEVING (counted in ``stats.re_retrievals``), so a
+deleted doc can never appear in a later-admitted prompt.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -19,39 +42,164 @@ import numpy as np
 from repro.configs.base import LMConfig
 from repro.models import transformer as tf
 
+# RagRequest lifecycle states (the tick state machine, DESIGN.md §11)
+QUEUED = "queued"            # submitted, retrieval not yet dispatched
+RETRIEVING = "retrieving"    # ANN search in flight on the RetrievalEngine
+READY = "ready"              # docs available, waiting for a free slot
+ACTIVE = "active"            # prompt prefilled into a slot, decoding
+DONE = "done"                # finished (EOS / max tokens / cache full)
+
 
 @dataclasses.dataclass
 class Request:
+    """Plain LM generation request (no retrieval stage)."""
     rid: int
     prompt: np.ndarray                  # [S] int32
     max_new_tokens: int = 16
     eos_id: int | None = None
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rag: "RagRequest | None" = None     # backlink when fronting a RagRequest
+
+
+@dataclasses.dataclass
+class RagRequest:
+    """First-class RAG serving request (one per user query).
+
+    Everything request-scoped lives here — query, ``k``, the per-request
+    ``tenant`` (None = single-index mode; this field replaces the old
+    parallel ``tenants=`` list kwargs), generation budget, and the
+    lifecycle ``state`` — so the engine API is ``submit_rag()`` /
+    ``poll()`` / ``run_until_drained()`` instead of the inverted
+    ``generate_rag(pipeline, queries, ...)`` batch call.
+    """
+    query: str
+    k: int = 3
+    tenant: str | None = None
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    rid: int = -1
+    state: str = QUEUED
+    docs: list = dataclasses.field(default_factory=list)
+    prompt: str | None = None           # augmented prompt (built at admission)
+    prompt_ids: np.ndarray | None = None
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    response: str | None = None
+    done: bool = False
+    _handle: object = dataclasses.field(default=None, repr=False)
+    _epoch: int | None = dataclasses.field(default=None, repr=False)
+
+    def result(self) -> dict:
+        """Legacy ``generate_rag`` row shape (the shim returns these)."""
+        return {"query": self.query, "docs": self.docs,
+                "prompt": self.prompt, "response": self.response}
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Per-engine counters; ``as_dict`` derives the two headline ratios:
+
+    ``overlap_ratio`` — fraction of retrieval coalescing ticks that ran
+      while a decode dispatch was in flight (1.0 = every retrieval fully
+      hidden behind decode; 0.0 = every retrieval paid serially, the old
+      barrier behaviour).
+    ``slot_occupancy`` — mean fraction of slots active per decode tick.
+    """
+    slots: int = 0
+    ticks: int = 0
+    decode_ticks: int = 0
+    tokens_out: int = 0
+    prefills: int = 0                # batched prefill dispatches
+    admitted: int = 0                # requests admitted into slots
+    finished: int = 0
+    retrieval_ticks: int = 0         # retrieval coalescing ticks pumped
+    overlapped_ticks: int = 0        # ...that ran during an in-flight decode
+    re_retrievals: int = 0           # READY results invalidated by a mutation
+    occupied_slot_ticks: int = 0     # sum over decode ticks of active slots
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["overlap_ratio"] = (self.overlapped_ticks
+                              / max(self.retrieval_ticks, 1))
+        d["slot_occupancy"] = (self.occupied_slot_ticks
+                               / max(self.decode_ticks * self.slots, 1))
+        return d
+
+
+SAMPLERS = ("greedy", "temperature")
 
 
 class ServeEngine:
-    def __init__(self, params, cfg: LMConfig, *, slots: int = 4,
-                 max_len: int = 256, dtype=jnp.float32,
-                 sampler: str = "greedy", seed: int = 0):
+    """Continuous-batching serving engine over one LM (+ optional RAG
+    pipeline).
+
+    Parameters
+    ----------
+    pipeline:    a ``RAGPipeline`` bound at construction; required for
+                 ``submit_rag``. Plain ``submit``/``generate`` work
+                 without one.
+    sampler:     "greedy" (argmax) or "temperature" (categorical at
+                 ``temperature``). Sampling keys fold (request rid, token
+                 position) into ``seed`` — NOT the slot or tick — so
+                 sampled output is identical under any admission schedule
+                 (the overlap-parity oracle holds for both samplers).
+    """
+
+    def __init__(self, params, cfg: LMConfig, *, pipeline=None,
+                 slots: int = 4, max_len: int = 256, dtype=jnp.float32,
+                 sampler: str = "greedy", temperature: float = 1.0,
+                 seed: int = 0):
+        if sampler not in SAMPLERS:
+            raise ValueError(f"unknown sampler {sampler!r}; "
+                             f"expected one of {SAMPLERS}")
+        if sampler == "temperature" and temperature <= 0:
+            raise ValueError(f"temperature must be > 0, got {temperature}")
         self.params = params
         self.cfg = cfg
+        self.pipeline = pipeline
         self.slots = slots
         self.max_len = max_len
         self.dtype = dtype
         self.sampler = sampler
+        self.temperature = float(temperature)
         self.key = jax.random.PRNGKey(seed)
-        self.queue: deque[Request] = deque()
+        self.queue: deque[Request] = deque()          # plain LM requests
+        self.rag_queue: deque[RagRequest] = deque()   # QUEUED
+        self.retrieving: list[RagRequest] = []        # RETRIEVING
+        self.ready: deque[RagRequest] = deque()       # READY (FIFO admission)
+        self._finished: deque[RagRequest] = deque()   # for poll()
         self.active: list[Request | None] = [None] * slots
         self._next_rid = 0
+        self.stats = EngineStats(slots=slots)
         self.cache = tf.init_cache(cfg, slots, max_len, dtype)
         self._decode = jax.jit(
             lambda p, t, c: tf.decode_step(p, cfg, t, c, dtype=dtype))
         self._prefill = jax.jit(
             lambda p, t, lens: tf.prefill(p, cfg, t, dtype=dtype,
                                           max_len=max_len, prompt_lens=lens))
-        self.ticks = 0
-        self.tokens_out = 0
+
+    # legacy counters (benchmarks/tests read these)
+    @property
+    def ticks(self) -> int:
+        return self.stats.ticks
+
+    @property
+    def tokens_out(self) -> int:
+        return self.stats.tokens_out
+
+    # ------------------------------------------------------------ sampling
+    def _sample(self, logits_row: np.ndarray, rid: int, t: int) -> int:
+        """Sample token ``t`` of request ``rid`` from one [V] logits row.
+
+        The PRNG key folds (rid, t) — never the slot index or engine tick
+        — so the draw is a pure function of the request and position:
+        identical under the sequential barrier, the overlapped loop, and
+        any randomized admission schedule (oracle-parity contract)."""
+        if self.sampler == "greedy":
+            return int(np.argmax(logits_row))
+        key = jax.random.fold_in(jax.random.fold_in(self.key, rid), t)
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row, jnp.float32) / self.temperature))
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt_ids, max_new_tokens: int = 16,
@@ -62,29 +210,138 @@ class ServeEngine:
         self.queue.append(r)
         return r
 
-    def _admit(self):
-        """Fill free slots: batched prefill of up to `slots` queued prompts."""
-        free = [i for i, a in enumerate(self.active) if a is None]
-        if not free or not self.queue:
+    def submit_rag(self, query: str, *, k: int = 3,
+                   tenant: str | None = None, max_new_tokens: int = 16,
+                   eos_id: int | None = None) -> RagRequest:
+        """Enqueue one RAG request; returns its handle immediately.
+
+        The request's retrieval is dispatched on a later tick and runs
+        behind in-flight decode compute; watch ``.state`` / ``.done`` or
+        collect finished requests via :meth:`poll`."""
+        if self.pipeline is None:
+            raise ValueError("submit_rag needs a pipeline: construct "
+                             "ServeEngine(..., pipeline=RAGPipeline(...))")
+        r = RagRequest(query=query, k=k, tenant=tenant,
+                       max_new_tokens=max_new_tokens, eos_id=eos_id,
+                       rid=self._next_rid)
+        self._next_rid += 1
+        self.rag_queue.append(r)
+        return r
+
+    def poll(self) -> list[RagRequest]:
+        """RAG requests finished since the last poll, completion order."""
+        out = list(self._finished)
+        self._finished.clear()
+        return out
+
+    # ------------------------------------------------------------ RAG flow
+    def _pump_rag(self) -> None:
+        """QUEUED -> RETRIEVING: hand every new request's query to the
+        RetrievalEngine (submission only — no dispatch, no blocking)."""
+        while self.rag_queue:
+            r = self.rag_queue.popleft()
+            r._handle = self.pipeline.submit_retrieval(r.query, r.k,
+                                                       tenant=r.tenant)
+            r.state = RETRIEVING
+            self.retrieving.append(r)
+
+    def _poll_retrieval(self, decode_in_flight: bool) -> None:
+        """Pump one retrieval coalescing tick (if anything is pending)
+        and move resolved requests RETRIEVING -> READY. Called in the
+        window between the decode dispatch and its materialization: when
+        ``decode_in_flight`` the retrieval work is hidden behind decode
+        compute (counted in ``stats.overlapped_ticks``)."""
+        if self.pipeline is None or not self.retrieving:
             return
-        take = [self.queue.popleft() for _ in range(min(len(free), len(self.queue)))]
-        # right-pad to a common length; per-request prompt_lens mask the pads
-        plen = max(len(r.prompt) for r in take)
-        batch = np.zeros((len(take), plen), np.int32)
-        lens = np.zeros(len(take), np.int32)
+        if self.pipeline.retriever.pending:
+            self.pipeline.poll_retrieval()
+            self.stats.retrieval_ticks += 1
+            if decode_in_flight:
+                self.stats.overlapped_ticks += 1
+        still: list[RagRequest] = []
+        for r in self.retrieving:
+            if r._handle.done:
+                # record validity now: the search ran this tick and host
+                # code is single-threaded, so the current epoch IS the
+                # epoch the results are valid for
+                r._epoch = self.pipeline.current_epoch(r.tenant)
+                r.state = READY
+                self.ready.append(r)
+            else:
+                still.append(r)
+        self.retrieving = still
+
+    def _prepare_rag(self, r: RagRequest) -> bool:
+        """Materialize a READY request's docs + prompt for admission.
+        Returns False (and re-queues the retrieval) if the index mutated
+        since the search ran — the privacy invariant: a prompt is only
+        built from results whose epoch is still current, so a doc
+        retracted mid-stream can never reach a later-admitted prompt."""
+        if self.pipeline.current_epoch(r.tenant) != r._epoch:
+            r._handle = self.pipeline.submit_retrieval(r.query, r.k,
+                                                       tenant=r.tenant)
+            r._epoch = None
+            r.state = RETRIEVING
+            self.retrieving.append(r)
+            self.stats.re_retrievals += 1
+            return False
+        from repro.data.corpus import encode_ids
+        r.docs = r._handle.docs()
+        r.prompt = self.pipeline.build_prompt(r.query, r.docs)
+        ids = encode_ids(r.prompt, self.cfg.vocab, self.max_len - 1)
+        r.prompt_ids = ids[ids > 0]
+        return True
+
+    # ------------------------------------------------------------ admission
+    def _admit(self):
+        """Fill free slots: batched prefill of up to ``slots`` prompts.
+        READY RAG requests admit first (they already waited through
+        retrieval), then the plain queue."""
+        free = [i for i, a in enumerate(self.active) if a is None]
+        if not free:
+            return
+        take: list[Request] = []
+        while len(take) < len(free) and (self.ready or self.queue):
+            if self.ready:
+                rr = self.ready.popleft()
+                if not self._prepare_rag(rr):
+                    continue            # epoch moved: back to RETRIEVING
+                req = Request(rr.rid, rr.prompt_ids, rr.max_new_tokens,
+                              rr.eos_id, out_tokens=rr.out_tokens, rag=rr)
+                rr.state = ACTIVE
+                take.append(req)
+            else:
+                take.append(self.queue.popleft())
+        if not take:
+            return
+        # Fixed-shape prefill (the "no recompilation as load changes"
+        # promise): always ``slots`` rows, prompt length bucketed to a
+        # power of two (capped at max_len-1) — so one engine compiles at
+        # most a handful of prefill shapes however admission interleaves.
+        # Pad rows/positions are dead: prompt_lens picks the real last
+        # position and cur_len masks pad KV out of every later decode.
+        need = max(len(r.prompt) for r in take)
+        plen = 16
+        while plen < need:
+            plen *= 2
+        plen = max(need, min(plen, self.max_len - 1))
+        batch = np.zeros((self.slots, plen), np.int32)
+        lens = np.zeros(self.slots, np.int32)
         for j, r in enumerate(take):
             batch[j, : len(r.prompt)] = r.prompt
             lens[j] = len(r.prompt)
         logits, cache = self._prefill(self.params, jnp.asarray(batch),
                                       jnp.asarray(lens))
-        first = np.asarray(jnp.argmax(logits[:, 0], -1))
+        first = np.asarray(logits[:, 0], np.float32)        # [B,V]
+        self.stats.prefills += 1
         k, v, cur = self.cache.k, self.cache.v, self.cache.cur_len
         ks, vs = self.cache.k_scale, self.cache.v_scale
         span = cache.k.shape[2]
         for j, r in enumerate(take):
             slot = free[j]
             self.active[slot] = r
-            r.out_tokens.append(int(first[j]))
+            self.stats.admitted += 1
+            r.out_tokens.append(self._sample(first[j], r.rid, 0))
             # copy this request's prefilled KV rows into its slot
             k = k.at[:, slot, :span].set(cache.k[:, j])
             v = v.at[:, slot, :span].set(cache.v[:, j])
@@ -96,38 +353,65 @@ class ServeEngine:
 
     # ------------------------------------------------------------- tick
     def step(self):
-        """One engine tick: admit, decode one token for every active slot."""
+        """One engine tick of the overlapped loop:
+
+        1. QUEUED -> RETRIEVING (submit new retrievals, non-blocking)
+        2. READY -> ACTIVE (batched prefill into free slots)
+        3. dispatch one decode token for every active slot (async)
+        4. pump one retrieval coalescing tick *while the decode runs*
+        5. materialize the decode, sample, evict finished slots
+        """
+        if self.pipeline is not None:
+            self._pump_rag()
         self._admit()
-        if not any(a is not None for a in self.active):
+        n_active = sum(a is not None for a in self.active)
+        logits = None
+        if n_active:
+            last = np.zeros((self.slots, 1), np.int32)
+            for i, r in enumerate(self.active):
+                if r is not None and r.out_tokens:
+                    last[i, 0] = r.out_tokens[-1]
+            logits, self.cache = self._decode(self.params,
+                                              jnp.asarray(last), self.cache)
+            # decode is dispatched, not materialized: the host is free
+            self.stats.decode_ticks += 1
+            self.stats.occupied_slot_ticks += n_active
+        # ---- overlap window: retrieval runs behind the in-flight decode
+        self._poll_retrieval(decode_in_flight=bool(n_active))
+        self.stats.ticks += 1
+        if logits is None:
             return
-        last = np.zeros((self.slots, 1), np.int32)
-        for i, r in enumerate(self.active):
-            if r is not None and r.out_tokens:
-                last[i, 0] = r.out_tokens[-1]
-        logits, self.cache = self._decode(self.params, jnp.asarray(last),
-                                          self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        nxt = np.asarray(logits[:, 0], np.float32)   # blocks on the decode
         cur = np.asarray(self.cache.cur_len)
-        self.ticks += 1
         for i, r in enumerate(self.active):
             if r is None:
                 continue
-            tok = int(nxt[i])
+            tok = self._sample(nxt[i], r.rid, len(r.out_tokens))
             r.out_tokens.append(tok)
-            self.tokens_out += 1
+            self.stats.tokens_out += 1
             if (r.eos_id is not None and tok == r.eos_id) \
                     or len(r.out_tokens) >= r.max_new_tokens \
                     or cur[i] >= self.max_len - 1:
                 r.done = True
+                if r.rag is not None:
+                    rr = r.rag
+                    rr.state = DONE
+                    rr.done = True
+                    rr.response = " ".join(f"<{t}>" for t in rr.out_tokens)
+                    self._finished.append(rr)
+                self.stats.finished += 1
                 self.active[i] = None
                 # park the slot at position 0 (keeps idle decodes in-bounds;
                 # re-admission overwrites + re-masks the rows)
                 self.cache = dataclasses.replace(
                     self.cache, cur_len=self.cache.cur_len.at[i].set(0))
 
+    def _work_pending(self) -> bool:
+        return bool(self.queue or self.rag_queue or self.retrieving
+                    or self.ready or any(a is not None for a in self.active))
+
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
-        while (self.queue or any(a is not None for a in self.active)) \
-                and self.ticks < max_ticks:
+        while self._work_pending() and self.stats.ticks < max_ticks:
             self.step()
 
     def generate(self, prompts: list, max_new_tokens: int = 16) -> list[list[int]]:
@@ -135,31 +419,31 @@ class ServeEngine:
         self.run_until_drained()
         return [r.out_tokens for r in reqs]
 
-    # ------------------------------------------------------------ RAG path
+    # ------------------------------------------------------------ RAG shim
     def generate_rag(self, pipeline, queries: list[str], *, k: int = 3,
                      max_new_tokens: int = 16,
                      tenants: list[str] | None = None) -> list[dict]:
-        """Serve RAG requests through the continuous-batching engine.
-
-        ``pipeline`` is a RAGPipeline over any VectorIndex backend: every
-        retrieval for the batch runs in ONE RetrievalEngine tick (bucket-
-        coalesced batched ANN + result cache, DESIGN.md §6), then every
-        augmented prompt is submitted at once so the slot scheduler batches
-        the generation — instead of the one-request-at-a-time
-        ``pipeline.answer`` loop. When the pipeline fronts an IndexPool,
-        ``tenants`` gives one tenant id per query; requests from different
-        tenants still coalesce into the same retrieval dispatch.
+        """DEPRECATED shim over the first-class request API: binds
+        ``pipeline`` to the engine (if none is bound yet), submits one
+        :class:`RagRequest` per query — ``tenants`` maps onto the
+        per-request ``tenant`` field — and drains. New code should
+        construct ``ServeEngine(..., pipeline=...)`` and use
+        ``submit_rag()`` / ``poll()`` / ``run_until_drained()`` directly;
+        unlike this batch call, the streaming API lets retrieval for
+        late-arriving requests hide behind decode ticks already running.
         """
-        from repro.data.corpus import encode_ids
-        retrieved = pipeline.retrieve_batch(queries, k, tenants=tenants) \
-            if tenants is not None else pipeline.retrieve_batch(queries, k)
-        prompts = [pipeline.build_prompt(q, docs)
-                   for q, docs in zip(queries, retrieved)]
-        reqs = []
-        for p in prompts:
-            ids = encode_ids(p, self.cfg.vocab, self.max_len - 1)
-            reqs.append(self.submit(ids[ids > 0], max_new_tokens))
+        if self.pipeline is None:
+            self.pipeline = pipeline
+        elif self.pipeline is not pipeline:
+            raise ValueError(
+                "engine is already bound to a different pipeline; "
+                "construct one ServeEngine(..., pipeline=...) per pipeline")
+        ts = tenants if tenants is not None else [None] * len(queries)
+        if len(ts) != len(queries):
+            raise ValueError("queries/tenants length mismatch")
+        reqs = [self.submit_rag(q, k=k, tenant=t,
+                                max_new_tokens=max_new_tokens)
+                for q, t in zip(queries, ts)]
         self.run_until_drained()
-        return [{"query": q, "docs": docs, "prompt": p,
-                 "response": " ".join(f"<{t}>" for t in r.out_tokens)}
-                for q, docs, p, r in zip(queries, retrieved, prompts, reqs)]
+        self.poll()                      # shim callers never poll; drain it
+        return [r.result() for r in reqs]

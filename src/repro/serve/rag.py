@@ -48,6 +48,36 @@ class RetrievedDoc:
     distance: float
 
 
+@dataclasses.dataclass
+class PendingRetrieval:
+    """Handle returned by :meth:`RAGPipeline.submit_retrieval` — the async
+    retrieval entry point the overlapped serving loop polls (DESIGN.md
+    §11). Wraps the underlying ``RetrievalEngine`` request (``None`` when
+    the corpus was empty at submission: resolved immediately with no
+    docs) and defers the key -> document-text materialization until the
+    caller actually needs the docs — so a document retracted between
+    search and admission is re-checked by the engine's epoch guard before
+    any prompt is built from it."""
+    request: object | None              # RetrievalRequest | None
+    tenant: str | None
+    _pipeline: "RAGPipeline" = dataclasses.field(repr=False, default=None)
+
+    @property
+    def done(self) -> bool:
+        return self.request is None or self.request.done
+
+    def docs(self) -> list[RetrievedDoc]:
+        """Materialize the retrieved documents (requires ``done``)."""
+        if self.request is None:
+            return []
+        if not self.request.done:
+            raise RuntimeError("retrieval still in flight: poll first")
+        if self.request.error is not None:
+            raise self.request.error
+        return self._pipeline._materialize(
+            self.request.keys, self.request.dists, self.tenant)
+
+
 class RAGPipeline:
     def __init__(self, *, encoder: HashingEncoder | None = None,
                  index: VectorIndex | None = None,
@@ -166,52 +196,81 @@ class RAGPipeline:
         self.store.remove(self._doc_key(key, tenant))
 
     # ------------------------------------------------------------ retrieve
+    def _size_for(self, tenant: str | None) -> int:
+        """Live row count of the (tenant's) corpus — ONE accessor for the
+        pool and single-index cases, so every retrieve verb shares one
+        code path (the per-request ``tenant`` field is the only tenancy
+        surface; ``tenant=None`` IS single-index mode)."""
+        if self.pool_mode:
+            if tenant is None:
+                raise ValueError(
+                    "pipeline fronts an IndexPool: pass tenant=")
+            return self.index.size(tenant)
+        if tenant is not None:
+            raise ValueError("tenant= requires an IndexPool index")
+        return self.index.size
+
+    def current_epoch(self, tenant: str | None = None) -> int:
+        """Mutation epoch governing retrieval validity for ``tenant``
+        (the whole index when ``tenant`` is None). The overlapped serving
+        loop records this when a retrieval resolves and re-checks it at
+        admission: a prompt is only ever built from results whose epoch
+        is still current (DESIGN.md §11 privacy invariant)."""
+        if self.pool_mode and tenant is not None:
+            return self.index.epoch(tenant)
+        return self.index.mutation_epoch
+
+    def _materialize(self, keys, dists, tenant: str | None
+                     ) -> list[RetrievedDoc]:
+        return [RetrievedDoc(key,
+                             self.store.get(self._doc_key(key, tenant)).text,
+                             float(d))
+                for key, d in zip(keys, dists) if key is not None]
+
+    def submit_retrieval(self, query: str, k: int = 3,
+                         tenant: str | None = None) -> PendingRetrieval:
+        """Async retrieval entry point (DESIGN.md §11): encode the query
+        and enqueue it on the RetrievalEngine WITHOUT dispatching —
+        returns a :class:`PendingRetrieval` the caller polls via
+        :meth:`poll_retrieval`. This is what lets ``ServeEngine`` run
+        retrieval for queued requests while its decode dispatch is in
+        flight. An empty corpus resolves immediately with no docs (the
+        everything-retracted case must not error the serving loop)."""
+        size = self._size_for(tenant)
+        if size == 0:
+            return PendingRetrieval(None, tenant, self)
+        qv = self.encoder.encode([query])[0]
+        req = self.retriever.submit(qv, k=min(k, size), tenant=tenant)
+        return PendingRetrieval(req, tenant, self)
+
+    def poll_retrieval(self) -> int:
+        """Run at most one RetrievalEngine coalescing tick (non-blocking;
+        see ``RetrievalEngine.poll``). Returns requests completed."""
+        return self.retriever.poll()
+
     def retrieve(self, query: str, k: int = 3,
                  tenant: str | None = None) -> list[RetrievedDoc]:
-        tenants = None if tenant is None else [tenant]
-        return self.retrieve_batch([query], k, tenants=tenants)[0]
+        return self.retrieve_batch([query], k,
+                                   tenants=None if tenant is None
+                                   else [tenant])[0]
 
     def retrieve_batch(self, queries: list[str], k: int = 3,
                        tenants: list[str] | None = None
                        ) -> list[list[RetrievedDoc]]:
         """Retrieve for many queries in ONE RetrievalEngine tick: a single
-        encode pass, then one bucket-coalesced device search per (k, ef)
-        group — the serving path ``ServeEngine.generate_rag`` uses for all
-        of its active slots. In pool mode ``tenants`` gives one tenant id
-        per query; different tenants still coalesce into the same dispatch."""
-        if self.pool_mode:
-            if tenants is None or len(tenants) != len(queries):
-                raise ValueError(
-                    "pool mode: pass tenants= (one id per query)")
-            # Queries against empty (or fully retracted) tenants yield no
-            # context; only live tenants go to the engine.
-            sizes = [self.index.size(t) for t in tenants]
-            live = [i for i, s in enumerate(sizes) if s > 0]
-            out: list[list[RetrievedDoc]] = [[] for _ in queries]
-            if not live:
-                return out
-            qv = self.encoder.encode([queries[i] for i in live])
-            reqs = self.retriever.retrieve(
-                qv, k=min(k, max(sizes[i] for i in live)),
-                tenants=[tenants[i] for i in live])
-            for i, r in zip(live, reqs):
-                out[i] = [RetrievedDoc(
-                              key,
-                              self.store.get(
-                                  self._doc_key(key, tenants[i])).text,
-                              float(d))
-                          for key, d in zip(r.keys, r.dists)
-                          if key is not None]
-            return out
-        if tenants is not None:
-            raise ValueError("tenants= requires an IndexPool index")
-        if self.index.size == 0:           # everything retracted: no context
-            return [[] for _ in queries]
-        qv = self.encoder.encode(list(queries))
-        reqs = self.retriever.retrieve(qv, k=min(k, self.index.size))
-        return [[RetrievedDoc(key, self.store.get(key).text, float(d))
-                 for key, d in zip(r.keys, r.dists) if key is not None]
-                for r in reqs]
+        submission pass, then one bucket-coalesced device search per
+        (k, ef) group. Pool and single-index callers share this one code
+        path: ``tenants`` is an optional per-query tenant list that
+        defaults to all-``None`` (single-index mode); requests from
+        different tenants still coalesce into the same dispatch."""
+        if tenants is None:
+            tenants = [None] * len(queries)
+        if len(tenants) != len(queries):
+            raise ValueError("queries/tenants length mismatch")
+        pend = [self.submit_retrieval(q, k, tenant=t)
+                for q, t in zip(queries, tenants)]
+        self.retriever.run_until_drained()
+        return [p.docs() for p in pend]
 
     # ------------------------------------------------------------- prompt
     def build_prompt(self, query: str, docs: list[RetrievedDoc]) -> str:

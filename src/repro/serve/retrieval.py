@@ -341,6 +341,23 @@ class RetrievalEngine:
         return n
 
     # ---------------------------------------------------------- frontends
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet dispatched (queue depth)."""
+        return len(self.queue)
+
+    def poll(self) -> int:
+        """Non-blocking pump for in-flight serving ticks (DESIGN.md §11):
+        run at most ONE coalescing tick — and only if anything is pending
+        — then return the number of requests completed. This is the
+        surface the overlapped ``ServeEngine`` loop calls while a decode
+        dispatch is in flight: it never loops, never blocks on an empty
+        queue, and one call costs at most one device dispatch per (k, ef)
+        group."""
+        if not self.queue:
+            return 0
+        return self.step()
+
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
         ticks = 0
         while self.queue and ticks < max_ticks:

@@ -83,6 +83,29 @@ def test_flash_decode(b, h, kvh, dh, s, bs, cur):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_flash_decode_per_sequence_cur_len():
+    """Continuous-batching shape (DESIGN.md §11): cur_len is a [B] vector
+    — each slot attends over its OWN live prefix. cur=1 is the floor the
+    engine can pass (a parked slot decodes with n_valid=1, never 0).
+    Must match per-row masking and the scalar fast path."""
+    b, h, kvh, dh, s, bs = 4, 8, 2, 32, 128, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, dh))
+    cur = jnp.asarray([100, 7, 1, 128], jnp.int32)
+    out = flash_decode_pallas(q, k, v, cur, block_s=bs, interpret=True)
+    exp = ref.flash_decode_ref(q, k, v, cur)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+    # each row equals the scalar-cur_len result for that row alone
+    for i in range(b):
+        solo = flash_decode_pallas(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                   jnp.asarray(int(cur[i])), block_s=bs,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(solo), rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("metric", ["cosine", "l2"])
 def test_distance_topk_prime_shapes(metric):
     """Regression (DESIGN.md §9 satellite): B or N prime used to collapse
