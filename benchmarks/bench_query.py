@@ -3,6 +3,11 @@
 
 Rows:
   hnsw_query_n{N}_ef{EF}    lock-step batched search latency + recall@10
+  hnsw_query_n{N}_ef64_{fused,jnp}
+                            layer-0 beam implementation head-to-head
+                            (DESIGN.md §12): same graph + queries, fused
+                            one-launch kernel vs per-hop jnp reference;
+                            derived carries recall@10 and dispatches=
   flat_query_n{N}           exact scan latency (the brute-force bound)
   engine_B{1,8,32,128}      RetrievalEngine per-query latency/QPS at each
                             bucket size (cache off — device throughput)
@@ -19,6 +24,8 @@ import jax
 import numpy as np
 
 from repro.core import make_index
+from repro.core import dispatch as jdispatch
+from repro.core import hnsw as jhnsw
 from repro.data.synthetic import make_corpus
 from repro.kernels import ref
 from repro.serve.retrieval import RetrievalEngine
@@ -68,6 +75,42 @@ def run(rows: list):
         us = (time.perf_counter() - t0) / reps / q_n * 1e6
         rec = _key_recall(found, true_i)
         rows.append((f"hnsw_query_n{n}_ef{ef}", us, f"recall@10={rec:.3f}"))
+
+    # ---- fused vs jnp layer-0 beam (DESIGN.md §12): same graph, same
+    # queries, both implementations head-to-head at ef=64. The smoke CI
+    # job asserts the fused row's us_per_call <= the jnp row's (0.9x
+    # noise tolerance) and that it reports dispatches=1 — the launch
+    # economics the kernel exists for. The corpus is larger than the
+    # ef-sweep's so the per-hop dispatch overhead the fusion removes is
+    # actually visible in the jnp row.
+    bn = 2_000 if SMOKE else 100_000
+    bdata = make_corpus(bn, dim, seed=2)
+    bidx = make_index("hnsw", metric="cosine", M=8, ef_construction=60,
+                      use_bulk_build=True)
+    bidx.bulk_insert([f"b{i}" for i in range(bn)], bdata)
+    bq = (bdata[rng.integers(0, bn, q_n)]
+          + 0.15 * rng.normal(size=(q_n, dim)).astype(np.float32))
+    bqn = bq / np.linalg.norm(bq, axis=1, keepdims=True)
+    bdn = bdata / np.linalg.norm(bdata, axis=1, keepdims=True)
+    _, btrue = ref.distance_topk_ref(jnp.asarray(bdn), jnp.asarray(bqn), 10)
+    btrue = np.asarray(btrue)
+    dg = bidx._dg()
+    for impl in ("fused", "jnp"):
+        ids, d = jhnsw.search_graph(dg, bq, k=10, ef=64,
+                                    beam_impl=impl)  # compile + sync
+        jax.block_until_ready(d)
+        jdispatch.reset("hnsw.beam_launches")
+        _, d = jhnsw.search_graph(dg, bq, k=10, ef=64, beam_impl=impl)
+        jax.block_until_ready(d)
+        disp = jdispatch.get("hnsw.beam_launches")
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ids, d = jhnsw.search_graph(dg, bq, k=10, ef=64, beam_impl=impl)
+            jax.block_until_ready(d)
+        us = (time.perf_counter() - t0) / reps / q_n * 1e6
+        rec = jhnsw.recall_at_k(np.asarray(ids), btrue)
+        rows.append((f"hnsw_query_n{bn}_ef64_{impl}", us,
+                     f"recall@10={rec:.3f} dispatches={disp}"))
 
     flat = make_index("flat", metric="cosine", dim=dim)
     flat.bulk_insert(keys, data)

@@ -177,6 +177,10 @@ class RetrievalConfig:
     # row-storage codec (DESIGN.md §9): None -> backend default (fp32);
     # "bf16"/"int8" shrink device blocks + snapshot pages per vector
     index_dtype: str | None = None
+    # layer-0 beam implementation (DESIGN.md §12): None -> backend
+    # default ("fused" one-launch kernel); "jnp" is the per-hop
+    # while_loop reference path
+    beam_impl: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)

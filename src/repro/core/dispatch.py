@@ -1,0 +1,55 @@
+"""Dispatch-count observability for the search path (DESIGN.md §12).
+
+Generalizes the single ``stacked.DISPATCH_COUNT`` module global into
+named host-side counters that tests and benches read to assert launch
+economics — e.g. "fused beam = 1 kernel launch per search, jnp beam =
+O(ef) per-hop gather dispatches" — and that bench rows report as a
+``dispatches`` column.
+
+Counters are bumped at the PYTHON boundary of each compiled entry point
+(never inside a trace): they count what a call *submits* per invocation
+under the compiled program's static launch structure, which is exactly
+the quantity the fused kernel collapses. Not thread-safe by design —
+the serving layer already serializes device work onto one dispatcher.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+_COUNTS: defaultdict[str, int] = defaultdict(int)
+
+
+def bump(name: str, n: int = 1) -> None:
+    """Add ``n`` to counter ``name`` (created at 0 on first use)."""
+    _COUNTS[name] += int(n)
+
+
+def get(name: str) -> int:
+    return _COUNTS[name]
+
+
+def reset(*names: str) -> None:
+    """Reset the given counters, or ALL counters when called bare."""
+    if names:
+        for name in names:
+            _COUNTS.pop(name, None)
+    else:
+        _COUNTS.clear()
+
+
+def snapshot() -> dict[str, int]:
+    return dict(_COUNTS)
+
+
+def beam_launches(beam_impl: str, ef: int,
+                  max_iters: int | None = None) -> int:
+    """Device launches one search contributes on the layer-0 beam path.
+
+    ``fused`` runs the whole ef-beam as ONE kernel launch
+    (kernels/beam_search.py). ``jnp`` compiles to a ``while_loop`` whose
+    body re-dispatches the gather+sort work every hop — its static hop
+    bound (``max_iters``, default ef) is the per-call launch count the
+    fused kernel eliminates."""
+    if beam_impl == "fused":
+        return 1
+    return max(int(ef if max_iters is None else max_iters), 1)

@@ -25,10 +25,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core.hnsw_build import HNSWGraph
 from repro.distributed.sharding import shard
 
 INF = jnp.float32(3.0e38)
+
+# frontier nodes expanded per hop on the fused beam path (DESIGN.md §12):
+# each DMA round amortizes over T nodes, so the one-launch kernel runs
+# ceil(ef / T) hops against the same ef-expansion budget as the reference
+DEFAULT_EXPAND_T = 4
 
 
 @jax.tree_util.register_pytree_node_class
@@ -261,7 +267,9 @@ def _beam_search(g: DeviceGraph, q: jax.Array, ep: jax.Array,
     """ef-beam best-first search on layer 0. Returns sorted (ids, dists)."""
     b = q.shape[0]
     m2 = g.neighbors0.shape[1]
-    max_iters = max_iters or ef
+    # explicit None check: max_iters=0 means ZERO expansions (entry point
+    # only), not "default to ef"
+    max_iters = ef if max_iters is None else max_iters
 
     beam_d = jnp.full((b, ef), INF).at[:, 0].set(ep_dist)
     beam_i = jnp.full((b, ef), -1, jnp.int32).at[:, 0].set(ep)
@@ -306,12 +314,38 @@ def _beam_search(g: DeviceGraph, q: jax.Array, ep: jax.Array,
     return beam_i, beam_d
 
 
+def _beam_search_fused(g: DeviceGraph, q: jax.Array, ep: jax.Array,
+                       ep_dist: jax.Array, ef: int,
+                       max_iters: int | None = None,
+                       expand_t: int | None = None):
+    """One-launch layer-0 beam search (kernels/beam_search.py via
+    ops.beam_search): the whole ef-beam — neighbor gather, fused codec
+    decode, bitonic merge — runs in a single kernel, expanding the top-T
+    frontier nodes per hop. The jnp fallback off-TPU runs the identical
+    algorithm (``ref.beam_search_ref``)."""
+    from repro.kernels import ops
+    return ops.beam_search(
+        g.vectors, g.neighbors0, q, ep, ep_dist, ef=ef, metric=g.metric,
+        scales=g.scales,
+        expand_t=DEFAULT_EXPAND_T if expand_t is None else expand_t,
+        max_iters=max_iters)
+
+
 def search_core(g: DeviceGraph, q: jax.Array, k: int, ef: int,
-                max_iters: int | None = None):
+                max_iters: int | None = None, beam_impl: str = "fused",
+                beam_expand: int | None = None):
     """Traceable whole-search body (descent + beam + tombstone filter),
     shared by the single-graph jit below and the stacked segment fan-out
     (core/stacked.py), which calls it per-shard inside ``shard_map``.
-    Queries must already be prepped (``_prep_queries``)."""
+    Queries must already be prepped (``_prep_queries``).
+
+    ``beam_impl`` selects the layer-0 beam: "fused" (default) runs the
+    whole beam as one kernel launch (DESIGN.md §12); "jnp" is the
+    per-hop ``while_loop`` reference. ``beam_expand`` overrides the
+    fused path's per-hop expansion width (default DEFAULT_EXPAND_T)."""
+    if beam_impl not in ("fused", "jnp"):
+        raise ValueError(f"unknown beam_impl {beam_impl!r}; "
+                         "expected 'fused' or 'jnp'")
     ep = jnp.broadcast_to(g.entry, q.shape[:1])
     x0 = jnp.take(g.vectors, ep, axis=0)
     if g.scales is not None:                 # decode the entry row (§9)
@@ -319,7 +353,11 @@ def search_core(g: DeviceGraph, q: jax.Array, k: int, ef: int,
     ep_dist = batched_dist(g.metric, q, x0[:, None])[:, 0]
     for layer in range(g.max_level, 0, -1):      # static unroll (few layers)
         ep, ep_dist = _greedy_layer(g, q, ep, ep_dist, layer)
-    beam_i, beam_d = _beam_search(g, q, ep, ep_dist, ef, max_iters)
+    if beam_impl == "fused":
+        beam_i, beam_d = _beam_search_fused(g, q, ep, ep_dist, ef,
+                                            max_iters, beam_expand)
+    else:
+        beam_i, beam_d = _beam_search(g, q, ep, ep_dist, ef, max_iters)
     # tombstone filter: deleted rows were traversable during the beam search
     # but must not be returned (DESIGN.md §3)
     dead = jnp.take(g.deleted, jnp.clip(beam_i, 0, g.n - 1)) | (beam_i < 0)
@@ -330,23 +368,46 @@ def search_core(g: DeviceGraph, q: jax.Array, k: int, ef: int,
     return beam_i[:, :k], beam_d[:, :k]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iters"))
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_iters",
+                                             "beam_impl", "beam_expand"))
 def _search_jit(g: DeviceGraph, q: jax.Array, k: int, ef: int,
-                max_iters: int | None):
-    return search_core(g, q, k, ef, max_iters)
+                max_iters: int | None, beam_impl: str,
+                beam_expand: int | None):
+    return search_core(g, q, k, ef, max_iters, beam_impl, beam_expand)
 
 
 def search_graph(g: DeviceGraph, queries, k: int = 10, ef: int = 64,
-                 max_iters: int | None = None):
-    """Batched k-NN query. queries [B, D] (or [D]) -> (ids [B,k], dist [B,k])."""
+                 max_iters: int | None = None, beam_impl: str = "fused",
+                 beam_expand: int | None = None):
+    """Batched k-NN query. queries [B, D] (or [D]) -> (ids [B,k], dist [B,k]).
+
+    ``beam_impl``/``beam_expand``: layer-0 beam selection, see
+    ``search_core``. Launch economics are counted host-side
+    (core/dispatch.py): one fused beam launch vs O(ef) per-hop
+    dispatches on the jnp path."""
     q = _prep_queries(g, queries)
     ef = max(ef, k)
-    return _search_jit(g, q, k, ef, max_iters)
+    dispatch.bump("hnsw.search_graph")
+    dispatch.bump("hnsw.beam_launches",
+                  dispatch.beam_launches(beam_impl, ef, max_iters))
+    return _search_jit(g, q, k, ef, max_iters, beam_impl, beam_expand)
 
 
 def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
-    """Mean fraction of true k-NN recovered."""
-    hits = 0
-    for f, t in zip(np.asarray(found_ids), np.asarray(true_ids)):
-        hits += len(set(int(x) for x in f) & set(int(x) for x in t))
-    return hits / max(true_ids.size, 1)
+    """Mean fraction of true k-NN recovered.
+
+    Vectorized broadcast membership (set semantics: duplicate found ids
+    count once, duplicate true ids count once — parity with the old
+    per-row Python set loop, without O(B·k) interpreter work inside
+    benchmark hot loops)."""
+    f = np.asarray(found_ids)
+    t = np.asarray(true_ids)
+    if t.size == 0:
+        return 0.0
+    member = (t[:, :, None] == f[:, None, :]).any(axis=2)      # [B, K]
+    # count each distinct true id once per row (first occurrence)
+    k = t.shape[1]
+    dup = ((t[:, :, None] == t[:, None, :])
+           & (np.arange(k)[None, :, None] > np.arange(k)[None, None, :]))
+    member &= ~dup.any(axis=2)
+    return float(member.sum()) / max(t.size, 1)

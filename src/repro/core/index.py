@@ -310,12 +310,12 @@ def _construct(kind: str, cfg: dict) -> VectorIndex:
     if kind == "flat":
         from repro.core.flat import FlatVectorIndex
         cfg.pop("M", None); cfg.pop("ef_construction", None)
-        cfg.pop("ef_search", None)
+        cfg.pop("ef_search", None); cfg.pop("beam_impl", None)
         return FlatVectorIndex(**cfg)
     if kind == "ivf":
         from repro.core.ivf import IVFVectorIndex
         cfg.pop("M", None); cfg.pop("ef_construction", None)
-        cfg.pop("ef_search", None)
+        cfg.pop("ef_search", None); cfg.pop("beam_impl", None)
         return IVFVectorIndex(**cfg)
     if kind == "hnsw":
         from repro.core.interface import HNSW
@@ -396,5 +396,8 @@ def make_index_from_config(cfg, kind: str | None = None, store=None,
     dt = getattr(cfg, "index_dtype", None)
     if dt is not None:
         params["dtype"] = dt
+    bi = getattr(cfg, "beam_impl", None)
+    if bi is not None:
+        params["beam_impl"] = bi
     params.update(overrides)
     return make_index(kind, store=store, **params)

@@ -63,10 +63,18 @@ class HNSW(VectorIndex):
                  ef_construction: int = 200, ef_search: int = 64,
                  seed: int = 0, use_bulk_build: bool = False,
                  n_shards: int = 1, dtype: str = "fp32",
-                 rerank_factor: int | None = None):
+                 rerank_factor: int | None = None,
+                 beam_impl: str = "fused"):
         if distance_function not in ("cosine", "ip", "l2"):
             raise ValueError(f"unknown distanceFunction {distance_function!r}")
+        if beam_impl not in ("fused", "jnp"):
+            raise ValueError(f"unknown beam_impl {beam_impl!r}; "
+                             "expected 'fused' or 'jnp'")
         self.metric = distance_function
+        # layer-0 beam implementation (DESIGN.md §12): "fused" runs the
+        # whole ef-beam as one kernel launch; "jnp" is the per-hop
+        # while_loop reference (the parity oracle)
+        self.beam_impl = beam_impl
         self.M = M
         self.ef_construction = ef_construction
         self.ef_search = ef_search
@@ -112,7 +120,8 @@ class HNSW(VectorIndex):
                 HNSW(distance_function=distance_function, M=M,
                      ef_construction=ef_construction, ef_search=ef_search,
                      seed=seed + j, use_bulk_build=False, n_shards=1,
-                     dtype=self.dtype, rerank_factor=rerank_factor)
+                     dtype=self.dtype, rerank_factor=rerank_factor,
+                     beam_impl=beam_impl)
                 for j in range(self.n_shards)]
 
     # --------------------------------------------------- shard plumbing
@@ -386,7 +395,8 @@ class HNSW(VectorIndex):
             return self._query_batch_sharded(q, k, ef)
         rf = effective_rerank(self._codec, self.rerank_factor)
         ids, dists = jhnsw.search_graph(self._dg(), q, k=k * rf,
-                                        ef=ef or self.ef_search)
+                                        ef=ef or self.ef_search,
+                                        beam_impl=self.beam_impl)
         ids, dists = np.asarray(ids), np.asarray(dists)
         if rf > 1:
             # over-fetched beam candidates rerank exactly in fp32 against
@@ -449,7 +459,8 @@ class HNSW(VectorIndex):
         rf = effective_rerank(self._codec, self.rerank_factor)
         kf = k * rf
         d, gid = jstacked.search_stacked(st, q, kf,
-                                         max(ef or self.ef_search, kf))
+                                         max(ef or self.ef_search, kf),
+                                         beam_impl=self.beam_impl)
         if rf > 1:
             d, gid = rerank_exact(self._rerank_rows(st), q, gid, k,
                                   metric=self.metric)
@@ -610,7 +621,8 @@ class HNSW(VectorIndex):
                 "ef_search": self.ef_search, "seed": self.seed,
                 "use_bulk_build": self.use_bulk_build,
                 "n_shards": self.n_shards, "dtype": self.dtype,
-                "rerank_factor": self.rerank_factor}
+                "rerank_factor": self.rerank_factor,
+                "beam_impl": self.beam_impl}
 
     def state_dict(self) -> tuple[dict, dict]:
         """Full mutation-determined host state, CAPACITY-padded: the

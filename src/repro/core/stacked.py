@@ -33,6 +33,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import dispatch
 from repro.core import hnsw as jhnsw
 from repro.core.sharded import SHARD_AXIS, resolve_wire_bf16
 from repro.distributed.collectives import hierarchical_topk
@@ -40,7 +41,10 @@ from repro.distributed.collectives import hierarchical_topk
 INF = np.float32(3e38)
 
 # incremented once per compiled stacked-search invocation: tests assert
-# a sharded ``query_batch`` is exactly ONE device dispatch at any S
+# a sharded ``query_batch`` is exactly ONE device dispatch at any S.
+# Kept as the historical module global; the named counters in
+# core/dispatch.py ("stacked.search_stacked", "stacked.beam_launches")
+# are bumped in lockstep.
 DISPATCH_COUNT = 0
 
 
@@ -124,7 +128,8 @@ def stack_device_graphs(graphs: list[jhnsw.DeviceGraph | None],
 
 @functools.lru_cache(maxsize=32)
 def _stacked_search_fn(mesh: Mesh, k: int, ef: int, metric: str,
-                       max_level: int, has_scales: bool, wire_bf16: bool):
+                       max_level: int, has_scales: bool, wire_bf16: bool,
+                       beam_impl: str = "fused"):
     """Compiled stacked fan-out: every shard runs the full lock-step
     search (``hnsw.search_core`` — greedy descent + ef-beam + tombstone
     filter) over its own slice, then the per-shard top-k merges through
@@ -144,7 +149,7 @@ def _stacked_search_fn(mesh: Mesh, k: int, ef: int, metric: str,
             levels=levels[0], entry=entry[0], deleted=deleted[0],
             max_level=max_level, metric=metric,
             scales=None if scl is None else scl[0])
-        ids, d = jhnsw.search_core(g, q, k, ef)
+        ids, d = jhnsw.search_core(g, q, k, ef, beam_impl=beam_impl)
         cap = vectors.shape[1]
         my = jax.lax.axis_index(SHARD_AXIS)
         gid = jnp.where(ids >= 0, my * cap + ids, -1)
@@ -174,12 +179,16 @@ def _stacked_search_fn(mesh: Mesh, k: int, ef: int, metric: str,
 
 
 def search_stacked(st: StackedGraphs, queries, k: int, ef: int,
-                   wire_bf16: bool | None = None
+                   wire_bf16: bool | None = None,
+                   beam_impl: str = "fused"
                    ) -> tuple[np.ndarray, np.ndarray]:
     """Batched k-NN over a stacked segment set: queries [B, D] ->
     (dists [B, k], gids [B, k]), missing slots (INF, -1). One compiled
     dispatch regardless of shard count; the only per-query host->device
-    movement is the query batch itself."""
+    movement is the query batch itself. ``beam_impl`` selects each
+    shard's layer-0 beam (fused one-launch kernel vs jnp reference) —
+    the same kernel rides under shard_map, so the fan-out stays a
+    single dispatch either way."""
     global DISPATCH_COUNT
     q = jnp.asarray(queries, jnp.float32)
     if st.metric == "cosine":
@@ -187,8 +196,11 @@ def search_stacked(st: StackedGraphs, queries, k: int, ef: int,
                             1e-12)
     fn = _stacked_search_fn(st.mesh, k, max(ef, k), st.metric,
                             st.max_level, st.scales is not None,
-                            resolve_wire_bf16(wire_bf16))
+                            resolve_wire_bf16(wire_bf16), beam_impl)
     DISPATCH_COUNT += 1
+    dispatch.bump("stacked.search_stacked")
+    dispatch.bump("stacked.beam_launches",
+                  dispatch.beam_launches(beam_impl, max(ef, k)))
     if st.scales is not None:
         d, gid = fn(st.vectors, st.neighbors0, st.upper, st.levels,
                     st.entry, st.deleted, st.scales, q)

@@ -179,19 +179,22 @@ class TieredIndex(VectorIndex):
                  cache_rows: int = 1024, prefetch_p: int | None = None,
                  seed: int = 0, use_bulk_build: bool = False,
                  n_shards: int = 1, dtype: str = "fp32",
-                 rerank_factor: int | None = None):
+                 rerank_factor: int | None = None,
+                 beam_impl: str = "fused"):
         from repro.core.codec import get_codec
         from repro.core.interface import HNSW   # lazy: avoid import cycle
         self.n_shards = int(n_shards)
         self.dtype = str(dtype)
         self.rerank_factor = rerank_factor
+        self.beam_impl = beam_impl
         self._codec = get_codec(self.dtype)
         self.inner = HNSW(distance_function=metric, M=M,
                           ef_construction=ef_construction,
                           ef_search=ef_search, seed=seed,
                           use_bulk_build=use_bulk_build,
                           n_shards=self.n_shards, dtype=self.dtype,
-                          rerank_factor=rerank_factor)
+                          rerank_factor=rerank_factor,
+                          beam_impl=beam_impl)
         self.metric = metric
         self.ef_search = ef_search
         self.cache_rows = cache_rows
@@ -348,7 +351,8 @@ class TieredIndex(VectorIndex):
                 "seed": self.inner.seed,
                 "use_bulk_build": self.inner.use_bulk_build,
                 "n_shards": self.n_shards, "dtype": self.dtype,
-                "rerank_factor": self.rerank_factor}
+                "rerank_factor": self.rerank_factor,
+                "beam_impl": self.beam_impl}
 
     def state_dict(self) -> tuple[dict, dict]:
         """The durable state IS the inner HNSW's (graph + tombstones +

@@ -1,0 +1,281 @@
+"""Fused layer-0 beam search — the whole ef-beam HNSW search in ONE
+kernel launch per query block (DESIGN.md §12).
+
+The jnp search (``core.hnsw._beam_search``) pays per hop: a separate
+``gather_distance`` dispatch plus two full [B, ef+2M] ``lax.sort``s,
+with the ``while_loop`` state bouncing through HBM between hops. This
+kernel keeps the ENTIRE search resident: the beam (dist, id, expanded)
+lives in VMEM scratch across hops, neighbor lists and candidate vector
+rows stream in over the same double-buffered DMA machinery as
+``gather_distance`` (HBM row fetch on semaphore pairs, wave i's
+distances compute while wave i+1 is in flight), and the merge is a
+single bitonic merge of the sorted beam against bitonic-sorted
+candidates — the beam is already sorted, so only the fresh T·2M
+candidates pay a full sort network.
+
+Per hop, the top-T unexpanded beam entries expand together (``expand_t``
+static, default 4) so each DMA round amortizes over multiple frontier
+nodes: hops = ceil(budget / T) instead of budget, with the last hop's
+selection truncated to the total expansion budget (``max_iters``;
+default ef, plus one slack hop at T>1 to match the re-ranking
+one-at-a-time order's recall). The frontier/dedup/merge math
+is the SAME code the jnp oracle runs (``ref.beam_select_frontier`` /
+``ref.beam_dedup_valid`` / ``ref.beam_merge``), so fused-vs-jnp parity
+is structural.
+
+Shapes / dtypes
+  vectors    [N, D]   f32 / bf16 / int8 (HBM, ``memory_space=ANY``;
+                      the per-row decode fuses into the distance)
+  neighbors0 [N, 2M]  i32 layer-0 adjacency, -1 pad (HBM)
+  q          [B, D]   f32 prepped queries
+  ep, ep_dist [B]     layer-0 entry points (from the greedy descent)
+  scales     [N] f32  optional per-row decode scales (int8 codec)
+  ->  (ids [B, ef] i32, dists [B, ef] f32) ascending by (d, id);
+      empty slots (-1, INF). Tombstone filtering stays in the caller
+      (``core.hnsw.search_core``), as on the jnp path.
+
+Grid / memory plan
+  grid = (B / block_q,). Beam state [BQ, EFp] (EFp = next pow2 of ef)
+  plus the selected-node ids, fetched neighbor lists [BQ*T, 2M], and
+  candidate distances [BQ, T*2M] all live in VMEM scratch; the
+  early-exit flag is one SMEM word guarding each hop body (``pl.when``),
+  so converged blocks skip the remaining hops' DMA entirely. Vector
+  rows ride a [2, wave, D] double buffer exactly like gather_distance.
+
+Fallback
+  ``interpret=None`` resolves platform-aware (kernels.resolve_interpret);
+  ``ops.beam_search`` only selects this path on TPU (or
+  REPRO_PALLAS=interpret) and otherwise runs ``ref.beam_search_ref`` —
+  the identical algorithm on the same helpers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref, resolve_interpret
+
+INF = ref.BEAM_INF
+
+
+def _kernel(metric: str, ef: int, efp: int, t: int, wave: int, hops: int,
+            budget: int, n_rows: int, has_scales: bool, *refs):
+    if has_scales:
+        (ep_ref, epd_ref, q_ref, nbr_tbl, db_ref, scl_ref,
+         outi_ref, outd_ref,
+         bd_ref, bi_ref, bx_ref, sel_ref, nbr_s, vrow_s, cd_ref, s_s,
+         done_ref, nbr_sem, v_sems, s_sems) = refs
+    else:
+        (ep_ref, epd_ref, q_ref, nbr_tbl, db_ref,
+         outi_ref, outd_ref,
+         bd_ref, bi_ref, bx_ref, sel_ref, nbr_s, vrow_s, cd_ref,
+         done_ref, nbr_sem, v_sems) = refs
+        scl_ref = s_s = s_sems = None
+    bq = q_ref.shape[0]
+    m2 = nbr_tbl.shape[1]
+    w = t * m2
+
+    # beam init: slot 0 = the entry point, the rest (INF, -1, expanded)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, efp), 1)
+    bd_ref[...] = jnp.where(col == 0, epd_ref[...], INF)
+    bi_ref[...] = jnp.where(col == 0, ep_ref[...], -1)
+    bx_ref[...] = (col != 0).astype(jnp.int32)
+    done_ref[0] = 0
+
+    def dma_rows(slot, w_idx):
+        """Issue the vector-row DMAs for flat wave ``w_idx``."""
+        def issue(i, _):
+            flat = w_idx * wave + i
+            c = flat % w
+            row = jnp.clip(nbr_s[(flat // w) * t + c // m2, c % m2],
+                           0, n_rows - 1)
+            pltpu.make_async_copy(
+                db_ref.at[pl.ds(row, 1)], vrow_s.at[slot, pl.ds(i, 1)],
+                v_sems.at[slot]).start()
+            if has_scales:
+                pltpu.make_async_copy(
+                    scl_ref.at[pl.ds(row, 1)],
+                    s_s.at[slot, pl.ds(i, 1)], s_sems.at[slot]).start()
+            return 0
+        jax.lax.fori_loop(0, wave, issue, 0)
+
+    def wait_rows(slot):
+        def wfn(i, _):
+            pltpu.make_async_copy(
+                db_ref.at[pl.ds(0, 1)], vrow_s.at[slot, pl.ds(i, 1)],
+                v_sems.at[slot]).wait()
+            if has_scales:
+                pltpu.make_async_copy(
+                    scl_ref.at[pl.ds(0, 1)],
+                    s_s.at[slot, pl.ds(i, 1)], s_sems.at[slot]).wait()
+            return 0
+        jax.lax.fori_loop(0, wave, wfn, 0)
+
+    def hop(h, _):
+        @pl.when(done_ref[0] == 0)
+        def _():
+            bd = bd_ref[...]
+            bi = bi_ref[...]
+            bx = bx_ref[...] != 0
+            t_live = jnp.minimum(t, budget - h * t)
+            bx2, nodes = ref.beam_select_frontier(bd, bi, bx, t_live, t)
+            sel_ref[...] = nodes
+
+            # phase 1: T neighbor-list rows per query, one DMA burst
+            def issue_n(i, _):
+                row = jnp.clip(sel_ref[i // t, i % t], 0, n_rows - 1)
+                pltpu.make_async_copy(
+                    nbr_tbl.at[pl.ds(row, 1)], nbr_s.at[pl.ds(i, 1)],
+                    nbr_sem.at[0]).start()
+                return 0
+            jax.lax.fori_loop(0, bq * t, issue_n, 0)
+
+            def wait_n(i, _):
+                pltpu.make_async_copy(
+                    nbr_tbl.at[pl.ds(0, 1)], nbr_s.at[pl.ds(i, 1)],
+                    nbr_sem.at[0]).wait()
+                return 0
+            jax.lax.fori_loop(0, bq * t, wait_n, 0)
+
+            # phase 2: candidate vector rows in double-buffered waves,
+            # fused codec decode + distance per row (gather_distance idiom)
+            total_waves = (bq * w) // wave
+            dma_rows(0, 0)
+
+            def step(w_idx, _):
+                slot = w_idx % 2
+
+                @pl.when(w_idx + 1 < total_waves)
+                def _():
+                    dma_rows((w_idx + 1) % 2, w_idx + 1)
+
+                wait_rows(slot)
+                rows = vrow_s[slot]
+
+                def one(i, _):
+                    flat = w_idx * wave + i
+                    b_i, c = flat // w, flat % w
+                    qv = q_ref[b_i, :].astype(jnp.float32)
+                    xv = rows[i, :].astype(jnp.float32)
+                    if has_scales:
+                        xv = xv * s_s[slot, i, 0]         # fused decode
+                    if metric in ("cosine", "ip"):
+                        dist = 1.0 - jnp.sum(qv * xv)
+                    else:
+                        dist = jnp.sum((qv - xv) ** 2)
+                    cd_ref[b_i, c] = dist
+                    return 0
+
+                jax.lax.fori_loop(0, wave, one, 0)
+                return 0
+
+            jax.lax.fori_loop(0, total_waves, step, 0)
+
+            # phase 3: dedup + single bitonic merge, all VMEM vector work
+            nbrs = nbr_s[...].reshape(bq, t, m2)
+            valid = ((nodes >= 0)[:, :, None] & (nbrs >= 0)).reshape(bq, w)
+            cand = jnp.clip(nbrs, 0, n_rows - 1).reshape(bq, w)
+            valid = ref.beam_dedup_valid(cand, valid, bi)
+            cd = jnp.where(valid, cd_ref[...], INF)
+            ci = jnp.where(valid, cand, -1)
+            nbd, nbi, nbx = ref.beam_merge(bd, bi, bx2, cd, ci, ef)
+            bd_ref[...] = nbd
+            bi_ref[...] = nbi
+            bx_ref[...] = nbx.astype(jnp.int32)
+            done_ref[0] = (
+                1 - jnp.any((~nbx) & (nbi >= 0)).astype(jnp.int32))
+        return 0
+
+    if hops > 0:
+        jax.lax.fori_loop(0, hops, hop, 0)
+    outd_ref[...] = bd_ref[...][:, :ef]
+    outi_ref[...] = bi_ref[...][:, :ef]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "ef", "expand_t",
+                                             "max_iters", "block_q",
+                                             "wave", "interpret"))
+def _call(vectors, neighbors0, q, ep, ep_dist, scales, metric, ef,
+          expand_t, max_iters, block_q, wave, interpret):
+    b, d = q.shape
+    n, m2 = neighbors0.shape
+    t = max(1, min(int(expand_t), int(ef)))
+    # default budget: ef expansions, plus ONE slack hop at t>1 — group
+    # frontier selection spends some budget on nodes the re-ranking
+    # one-at-a-time order would skip, and the slack hop restores its
+    # recall (measured; see DESIGN.md §12). t=1 stays exactly ef so the
+    # visit order is bitwise the sequential reference.
+    budget = ((int(ef) + (t if t > 1 else 0)) if max_iters is None
+              else int(max_iters))
+    hops = -(-budget // t) if budget > 0 else 0
+    efp = ref.next_pow2(ef)
+    block_q = min(block_q, b)
+    while b % block_q:
+        block_q -= 1
+    w = t * m2
+    wave = min(wave, block_q * w)
+    while (block_q * w) % wave:
+        wave -= 1
+    has_scales = scales is not None
+
+    in_specs = [
+        pl.BlockSpec((block_q, 1), lambda i: (i, 0)),     # entry ids
+        pl.BlockSpec((block_q, 1), lambda i: (i, 0)),     # entry dists
+        pl.BlockSpec((block_q, d), lambda i: (i, 0)),     # queries
+        pl.BlockSpec(memory_space=pl.ANY),                # neighbors0
+        pl.BlockSpec(memory_space=pl.ANY),                # db rows
+    ]
+    args = [ep.reshape(b, 1).astype(jnp.int32),
+            ep_dist.reshape(b, 1).astype(jnp.float32),
+            q.astype(jnp.float32), neighbors0, vectors]
+    if has_scales:
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        args.append(scales.reshape(-1, 1).astype(jnp.float32))
+    scratch_shapes = [
+        pltpu.VMEM((block_q, efp), jnp.float32),          # beam dists
+        pltpu.VMEM((block_q, efp), jnp.int32),            # beam ids
+        pltpu.VMEM((block_q, efp), jnp.int32),            # expanded flags
+        pltpu.VMEM((block_q, t), jnp.int32),              # selected nodes
+        pltpu.VMEM((block_q * t, m2), jnp.int32),         # neighbor rows
+        pltpu.VMEM((2, wave, d), vectors.dtype),          # row double-buffer
+        pltpu.VMEM((block_q, w), jnp.float32),            # candidate dists
+    ]
+    if has_scales:
+        scratch_shapes.append(pltpu.VMEM((2, wave, 1), jnp.float32))
+    scratch_shapes.append(pltpu.SMEM((1,), jnp.int32))    # early-exit flag
+    scratch_shapes.append(pltpu.SemaphoreType.DMA((1,)))  # neighbor-list sem
+    scratch_shapes.append(pltpu.SemaphoreType.DMA((2,)))  # row sem pair
+    if has_scales:
+        scratch_shapes.append(pltpu.SemaphoreType.DMA((2,)))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, metric, int(ef), efp, t, wave, hops,
+                          budget, n, has_scales),
+        grid=(b // block_q,),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((block_q, ef), lambda i: (i, 0)),
+                   pl.BlockSpec((block_q, ef), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b, ef), jnp.int32),
+                   jax.ShapeDtypeStruct((b, ef), jnp.float32)),
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(*args)
+
+
+def beam_search_pallas(vectors: jax.Array, neighbors0: jax.Array,
+                       q: jax.Array, ep: jax.Array, ep_dist: jax.Array,
+                       *, ef: int, metric: str = "cosine",
+                       scales: jax.Array | None = None, expand_t: int = 4,
+                       max_iters: int | None = None, block_q: int = 8,
+                       wave: int = 16, interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """One kernel launch per query block for the whole layer-0 ef-beam
+    search. ``interpret=None`` resolves platform-aware."""
+    return _call(vectors, neighbors0, q, ep, ep_dist, scales, metric,
+                 int(ef), int(expand_t),
+                 None if max_iters is None else int(max_iters),
+                 block_q, wave, resolve_interpret(interpret))

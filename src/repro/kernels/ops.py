@@ -51,6 +51,31 @@ def gather_distance(vectors: jax.Array, q: jax.Array, ids: jax.Array,
                                     scales=scales)
 
 
+def beam_search(vectors: jax.Array, neighbors0: jax.Array, q: jax.Array,
+                ep: jax.Array, ep_dist: jax.Array, *, ef: int,
+                metric: str = "cosine", scales: jax.Array | None = None,
+                expand_t: int = 4, max_iters: int | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Whole layer-0 ef-beam HNSW search in ONE launch (DESIGN.md §12):
+    per-hop neighbor gather, fused codec-decode distance, and in-kernel
+    bitonic beam merge, expanding the top ``expand_t`` frontier nodes
+    per hop. vectors [N,D] (any codec dtype, ``scales`` [N] decodes),
+    neighbors0 [N,2M] i32, q [B,D], ep/ep_dist [B] entry points ->
+    (ids [B,ef], dists [B,ef]) ascending by (d, id), empty slots
+    (-1, INF). The jnp fallback is the identical algorithm on the same
+    helpers (``ref.beam_search_ref``)."""
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels.beam_search import beam_search_pallas
+        return beam_search_pallas(vectors, neighbors0, q, ep, ep_dist,
+                                  ef=ef, metric=metric, scales=scales,
+                                  expand_t=expand_t, max_iters=max_iters,
+                                  interpret=interp)
+    return _ref.beam_search_ref(vectors, neighbors0, q, ep, ep_dist,
+                                ef=ef, metric=metric, scales=scales,
+                                expand_t=expand_t, max_iters=max_iters)
+
+
 def flat_topk(db: jax.Array, q: jax.Array, k: int,
               *, metric: str = "cosine",
               scales: jax.Array | None = None

@@ -61,6 +61,209 @@ def embedding_bag_ref(table: jax.Array, ids: jax.Array,
     return s
 
 
+# ---------------------------------------------------------------------------
+# fused beam search (kernels/beam_search.py): shared algorithm + jnp oracle
+# ---------------------------------------------------------------------------
+# The helpers below are used BOTH by ``beam_search_ref`` and by the Pallas
+# kernel body (which swaps the gather for double-buffered DMA but runs the
+# identical frontier/dedup/merge math on the fetched values) — one
+# implementation, so fused-vs-jnp parity is structural, not coincidental.
+
+# == core.hnsw.INF (empty-slot distance); a Python float so the Pallas
+# kernel body can close over it without capturing a device constant
+BEAM_INF = 3.0e38
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def _compare_exchange(d, i, x, stride: int, asc_mask):
+    """One bitonic compare-exchange stage on (dist, id, payload) triples
+    along the last axis, ordered by the two-key (d, id) lexicographic
+    compare. ``asc_mask`` [W] is each position's block direction. The
+    partner of position p is p ^ stride — p+stride in lower halves,
+    p-stride in upper halves — so a pair of rolls never wraps a pair
+    across the array edge."""
+    lower = (jnp.arange(d.shape[-1]) & stride) == 0
+    pd = jnp.where(lower, jnp.roll(d, -stride, -1), jnp.roll(d, stride, -1))
+    pi = jnp.where(lower, jnp.roll(i, -stride, -1), jnp.roll(i, stride, -1))
+    px = jnp.where(lower, jnp.roll(x, -stride, -1), jnp.roll(x, stride, -1))
+    le = (d < pd) | ((d == pd) & (i <= pi))
+    keep = jnp.where(lower == asc_mask, le, ~le)
+    return (jnp.where(keep, d, pd), jnp.where(keep, i, pi),
+            jnp.where(keep, x, px))
+
+
+def bitonic_sort(d, i, x, *, ascending: bool = True):
+    """Full bitonic sort along the last axis (width must be a power of
+    two) by the two-key (d, id) order. ~log²W compare-exchange stages of
+    pure vector ops — no lax.sort, so the same network runs inside the
+    Pallas kernel body."""
+    w = d.shape[-1]
+    idx = jnp.arange(w)
+    size = 2
+    while size <= w:
+        asc_mask = ((idx & size) == 0) == bool(ascending)
+        stride = size // 2
+        while stride:
+            d, i, x = _compare_exchange(d, i, x, stride, asc_mask)
+            stride //= 2
+        size *= 2
+    return d, i, x
+
+
+def bitonic_merge(d, i, x):
+    """Bitonic merge: a bitonic input along the last axis (power-of-two
+    width) sorts ascending in log W compare-exchange stages — the cheap
+    half of a full sort, and the reason the beam stays sorted between
+    hops instead of being re-sorted."""
+    asc = jnp.ones(d.shape[-1], bool)
+    stride = d.shape[-1] // 2
+    while stride:
+        d, i, x = _compare_exchange(d, i, x, stride, asc)
+        stride //= 2
+    return d, i, x
+
+
+def beam_select_frontier(bd, bi, bx, t_live, t: int):
+    """Mark the first ``t_live`` (<= t) unexpanded entries of the
+    (ascending-sorted) beam as expanded and extract their node ids.
+    Returns (new_bx, nodes [B, t] with -1 for unfilled slots). Rank among
+    unexpanded entries comes from a strict-lower-triangular matmul —
+    MXU-friendly and Mosaic-safe, where a lane cumsum is not."""
+    efp = bd.shape[-1]
+    unexp = (~bx) & (bi >= 0)
+    tri = (jnp.arange(efp)[:, None] < jnp.arange(efp)[None, :]
+           ).astype(jnp.float32)
+    rank = jnp.dot(unexp.astype(jnp.float32), tri,
+                   preferred_element_type=jnp.float32).astype(jnp.int32)
+    sel = unexp & (rank < t_live)
+    nodes = jnp.stack(
+        [jnp.max(jnp.where(sel & (rank == j), bi, -1), axis=-1)
+         for j in range(t)], axis=-1)
+    return bx | sel, nodes
+
+
+def beam_dedup_valid(cand, valid, bi):
+    """Drop candidates already in the beam, or duplicated EARLIER in the
+    flat candidate list (cross-list dups from multi-node expansion; the
+    builder guarantees uniqueness within one neighbor list, not across
+    lists). Keeping the earliest copy matches the reference semantics:
+    duplicate copies carry bitwise-identical distances."""
+    w = cand.shape[-1]
+    in_beam = jnp.any(cand[:, :, None] == bi[:, None, :], axis=-1)
+    eq = cand[:, :, None] == cand[:, None, :]
+    earlier = jnp.arange(w)[:, None] > jnp.arange(w)[None, :]
+    dup = jnp.any(eq & earlier[None] & valid[:, None, :], axis=-1)
+    return valid & ~in_beam & ~dup
+
+
+def beam_merge(bd, bi, bx, cd, ci, ef: int, use_bitonic: bool = True):
+    """One-hop beam merge: bitonic-sort the candidates DESCENDING, glue
+    them after the already-ascending beam (+ an INF plateau up to the
+    next power of two) — the concatenation is bitonic by construction —
+    and run a single bitonic merge. Entries past ``ef`` reset to
+    (INF, -1, expanded) so the logical beam width stays exactly ef
+    (recall parity with the ef-wide reference beam).
+
+    ``use_bitonic=False`` swaps the network for one ``lax.sort`` over
+    the plain concatenation — output-identical (live (d, id) keys are
+    unique after dedup; ties exist only among (INF, -1) pads, whose
+    expanded bit is never read downstream) but much cheaper as compiled
+    XLA, where the network's O(log^2 W) elementwise stages lose to the
+    native sort. The kernel keeps the network: Mosaic has no sort."""
+    b, efp = bd.shape
+    w = cd.shape[-1]
+    if not use_bitonic:
+        md = jnp.concatenate([bd, cd], axis=-1)
+        mi = jnp.concatenate([bi, ci], axis=-1)
+        mx = jnp.concatenate([bx, jnp.zeros((b, w), bool)], axis=-1)
+        md, mi, mx = jax.lax.sort((md, mi, mx), dimension=-1, num_keys=2)
+        live = jnp.arange(efp) < ef
+        return (jnp.where(live, md[:, :efp], BEAM_INF),
+                jnp.where(live, mi[:, :efp], -1),
+                jnp.where(live, mx[:, :efp], True))
+    wp = next_pow2(w)
+    if wp > w:
+        cd = jnp.concatenate(
+            [cd, jnp.full((b, wp - w), BEAM_INF)], axis=-1)
+        ci = jnp.concatenate(
+            [ci, jnp.full((b, wp - w), -1, jnp.int32)], axis=-1)
+    cx = jnp.zeros((b, wp), bool)
+    cd, ci, cx = bitonic_sort(cd, ci, cx, ascending=False)
+    pad = next_pow2(efp + wp) - efp - wp
+    md = jnp.concatenate([bd, jnp.full((b, pad), BEAM_INF), cd], axis=-1)
+    mi = jnp.concatenate(
+        [bi, jnp.full((b, pad), -1, jnp.int32), ci], axis=-1)
+    mx = jnp.concatenate([bx, jnp.ones((b, pad), bool), cx], axis=-1)
+    md, mi, mx = bitonic_merge(md, mi, mx)
+    live = jnp.arange(efp) < ef
+    return (jnp.where(live, md[:, :efp], BEAM_INF),
+            jnp.where(live, mi[:, :efp], -1),
+            jnp.where(live, mx[:, :efp], True))
+
+
+def beam_search_ref(vectors: jax.Array, neighbors0: jax.Array,
+                    q: jax.Array, ep: jax.Array, ep_dist: jax.Array,
+                    *, ef: int, metric: str = "cosine",
+                    scales: jax.Array | None = None, expand_t: int = 4,
+                    max_iters: int | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """jnp oracle for the fused layer-0 ef-beam search kernel: identical
+    frontier selection, dedup, and bitonic merge, with the kernel's
+    per-hop DMA gather replaced by ``gather_distance_ref``.
+
+    vectors [N, D] (any codec dtype; ``scales`` [N] decodes), neighbors0
+    [N, 2M] i32 (-1 pad), q [B, D] f32, ep/ep_dist [B] layer-0 entry
+    points. Returns (ids [B, ef], dists [B, ef]) ascending by (d, id);
+    empty slots are (-1, INF).
+
+    ``expand_t`` nodes expand per hop against a TOTAL expansion budget of
+    ``max_iters`` (default ef, plus one slack hop when expand_t > 1), so
+    hops = ceil(budget / expand_t) with the last hop truncated. At
+    expand_t=1 the visit order is exactly the sequential-semantics
+    ``core.hnsw._beam_search`` order."""
+    b = q.shape[0]
+    n, m2 = neighbors0.shape
+    t = max(1, min(int(expand_t), int(ef)))
+    # default budget: ef, plus one slack hop at t>1 (kept in lockstep
+    # with kernels/beam_search.py — group frontier selection needs the
+    # slack to match the one-at-a-time order's recall, DESIGN.md §12)
+    budget = ((int(ef) + (t if t > 1 else 0)) if max_iters is None
+              else int(max_iters))
+    hops = -(-budget // t) if budget > 0 else 0
+    efp = next_pow2(ef)
+    col = jnp.arange(efp)[None, :]
+    bd = jnp.where(col == 0, ep_dist[:, None].astype(jnp.float32), BEAM_INF)
+    bi = jnp.where(col == 0, ep[:, None].astype(jnp.int32), -1)
+    bx = jnp.broadcast_to(col != 0, (b, efp))
+
+    def cond(state):
+        bd, bi, bx, hop = state
+        return (hop < hops) & jnp.any((~bx) & (bi >= 0))
+
+    def body(state):
+        bd, bi, bx, hop = state
+        t_live = jnp.minimum(t, budget - hop * t)
+        bx, nodes = beam_select_frontier(bd, bi, bx, t_live, t)
+        nbrs = jnp.take(neighbors0, jnp.clip(nodes, 0, n - 1), axis=0)
+        valid = ((nodes >= 0)[:, :, None] & (nbrs >= 0)).reshape(b, t * m2)
+        cand = jnp.clip(nbrs, 0, n - 1).reshape(b, t * m2)
+        d = gather_distance_ref(vectors, q, cand, metric=metric,
+                                scales=scales)
+        valid = beam_dedup_valid(cand, valid, bi)
+        cd = jnp.where(valid, d, BEAM_INF)
+        ci = jnp.where(valid, cand, -1)
+        bd, bi, bx = beam_merge(bd, bi, bx, cd, ci, int(ef),
+                                use_bitonic=False)
+        return bd, bi, bx, hop + 1
+
+    bd, bi, bx, _ = jax.lax.while_loop(
+        cond, body, (bd, bi, bx, jnp.zeros((), jnp.int32)))
+    return bi[:, :ef], bd[:, :ef]
+
+
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      cur_len: jax.Array) -> jax.Array:
     """q [B,H,Dh]; k,v [B,S,KVH,Dh]; mask pos >= cur_len -> out [B,H,Dh].

@@ -84,6 +84,12 @@ def main():
                          "smaller), asymmetric search with fp32 rerank. "
                          "Default: fp32 (or the stored codec on a warm "
                          "restore — a mismatch is rejected)")
+    ap.add_argument("--beam-impl", default=None,
+                    choices=("fused", "jnp"),
+                    help="HNSW layer-0 beam implementation (DESIGN.md "
+                         "§12): 'fused' runs the whole ef-beam as one "
+                         "kernel launch; 'jnp' is the per-hop while_loop "
+                         "reference. Default: fused")
     ap.add_argument("--retrieval-batch", type=_power_of_two, default=128,
                     help="RetrievalEngine bucket cap (power of two)")
     ap.add_argument("--retrieval-cache", type=int, default=1024,
@@ -199,7 +205,8 @@ def main():
                           retrieval_batch=args.retrieval_batch,
                           retrieval_cache=args.retrieval_cache,
                           index_shards=args.shards,
-                          index_dtype=args.index_dtype)
+                          index_dtype=args.index_dtype,
+                          index_beam_impl=args.beam_impl)
         if rag.index.shard_count > 1:
             logger.info(f"index sharded over {rag.index.shard_count} "
                         f"devices (key-hash routing + fan-out search)")

@@ -89,7 +89,8 @@ class RAGPipeline:
                  M: int = 16, ef_construction: int = 100,
                  retrieval_batch: int = 128, retrieval_cache: int = 1024,
                  index_shards: int | None = None,
-                 index_dtype: str | None = None):
+                 index_dtype: str | None = None,
+                 index_beam_impl: str | None = None):
         # index_store: an ``IndexStore`` (or path) making the index durable
         # (DESIGN.md §7) — a warm store restores the previous session's
         # index, mutation_epoch included, instead of building a fresh one.
@@ -100,10 +101,15 @@ class RAGPipeline:
         # None keeps the backend default — and, on a warm restore, the
         # stored codec (an explicit mismatch with a warm store is
         # rejected: encoded pages cannot be transcoded).
+        # index_beam_impl: HNSW layer-0 beam implementation (DESIGN.md
+        # §12, "fused" one-launch kernel vs "jnp" reference); None keeps
+        # the backend default.
         self.encoder = encoder or HashingEncoder()
         shard_cfg = {} if index_shards is None else {"n_shards": index_shards}
         if index_dtype is not None:
             shard_cfg["dtype"] = index_dtype
+        if index_beam_impl is not None:
+            shard_cfg["beam_impl"] = index_beam_impl
         self.index = index if index is not None else make_index(
             index_kind, store=index_store, metric="cosine",
             dim=self.encoder.dim, M=M, ef_construction=ef_construction,

@@ -1,0 +1,275 @@
+"""Fused layer-0 beam search (DESIGN.md §12): kernel-vs-oracle parity,
+fused-vs-jnp search parity/recall, tombstones, codecs, launch counting,
+and the max_iters=0 / recall_at_k satellite regressions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch, hnsw, hnsw_build
+from repro.core.codec import get_codec
+from repro.core.interface import HNSW
+from repro.data.synthetic import make_corpus
+from repro.kernels import ref
+from repro.kernels.beam_search import beam_search_pallas
+
+
+@pytest.fixture(scope="module")
+def built():
+    data = make_corpus(1000, 24, seed=0)
+    g = hnsw_build.build_sequential(data, M=8, ef_construction=60)
+    dg = hnsw.to_device_graph(g)
+    queries = make_corpus(32, 24, seed=1)
+    qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+    _, true_i = ref.distance_topk_ref(jnp.asarray(g.vectors),
+                                      jnp.asarray(qn), 10, metric="cosine")
+    return g, dg, queries, np.asarray(true_i)
+
+
+# ---------------------------------------------------------------------------
+# fused vs jnp through search_graph
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ef", [16, 64])
+def test_fused_t1_exact_parity(built, ef):
+    """At expand_t=1 the fused visit order IS the sequential-semantics
+    reference order: identical ids, distances to float rounding."""
+    g, dg, queries, _ = built
+    i_ref, d_ref = hnsw.search_graph(dg, queries, k=10, ef=ef,
+                                     beam_impl="jnp")
+    i_fus, d_fus = hnsw.search_graph(dg, queries, k=10, ef=ef,
+                                     beam_impl="fused", beam_expand=1)
+    np.testing.assert_array_equal(np.asarray(i_fus), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(d_fus), np.asarray(d_ref),
+                               rtol=2e-7, atol=0)
+
+
+@pytest.mark.parametrize("t", [2, 4])
+def test_fused_recall_matches_reference(built, t):
+    """T-expansion may visit MORE nodes than the one-at-a-time order,
+    never fewer useful ones: recall within 0.005 of the jnp path."""
+    g, dg, queries, true_i = built
+    i_ref, _ = hnsw.search_graph(dg, queries, k=10, ef=64, beam_impl="jnp")
+    i_fus, _ = hnsw.search_graph(dg, queries, k=10, ef=64,
+                                 beam_impl="fused", beam_expand=t)
+    r_ref = hnsw.recall_at_k(np.asarray(i_ref), true_i)
+    r_fus = hnsw.recall_at_k(np.asarray(i_fus), true_i)
+    assert r_fus >= r_ref - 0.005, (r_fus, r_ref)
+    assert r_fus >= 0.85
+
+
+def test_fused_tombstone_filtering(built):
+    """Deleted rows stay traversable but are never returned — on the
+    fused path exactly as on the reference path."""
+    g, dg, queries, _ = built
+    rng = np.random.default_rng(7)
+    deleted = rng.random(g.n) < 0.2
+    dgd = hnsw.to_device_graph(g, deleted)
+    for impl, kw in (("jnp", {}), ("fused", {}),
+                     ("fused", {"beam_expand": 1})):
+        ids, dists = hnsw.search_graph(dgd, queries, k=10, ef=64,
+                                       beam_impl=impl, **kw)
+        ids = np.asarray(ids)
+        live = ids[ids >= 0]
+        assert not deleted[live].any(), f"{impl} returned deleted ids"
+        assert (np.asarray(dists)[ids < 0] >= 1e38).all()
+    # T=1 with tombstones is still bitwise the reference
+    i_ref, _ = hnsw.search_graph(dgd, queries, k=10, ef=64, beam_impl="jnp")
+    i_fus, _ = hnsw.search_graph(dgd, queries, k=10, ef=64,
+                                 beam_impl="fused", beam_expand=1)
+    np.testing.assert_array_equal(np.asarray(i_fus), np.asarray(i_ref))
+
+
+def test_fused_all_deleted_returns_nothing(built):
+    g, dg, queries, _ = built
+    dgd = hnsw.to_device_graph(g, np.ones(g.n, bool))
+    for impl in ("jnp", "fused"):
+        ids, dists = hnsw.search_graph(dgd, queries, k=10, ef=32,
+                                       beam_impl=impl)
+        assert (np.asarray(ids) == -1).all()
+        assert (np.asarray(dists) >= 1e38).all()
+
+
+def test_empty_index_raises():
+    idx = HNSW()
+    with pytest.raises(ValueError, match="empty"):
+        idx.query_batch(np.zeros((2, 8), np.float32), k=3)
+
+
+@pytest.mark.parametrize("dtype", ["int8", "bf16"])
+def test_fused_codec_decode_parity(dtype):
+    """In-kernel codec decode (DESIGN.md §9): the fused beam over
+    encoded rows matches the jnp path over the same encoded rows."""
+    data = make_corpus(600, 16, seed=4)
+    g = hnsw_build.build_sequential(data, M=8, ef_construction=50)
+    codec = get_codec(dtype)
+    enc, scales = codec.encode(np.asarray(g.vectors, np.float32))
+    dg = hnsw.to_device_graph(g, None, enc=enc, scales=scales)
+    queries = make_corpus(16, 16, seed=5)
+    i_ref, d_ref = hnsw.search_graph(dg, queries, k=10, ef=48,
+                                     beam_impl="jnp")
+    i_fus, d_fus = hnsw.search_graph(dg, queries, k=10, ef=48,
+                                     beam_impl="fused", beam_expand=1)
+    np.testing.assert_array_equal(np.asarray(i_fus), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(d_fus), np.asarray(d_ref),
+                               rtol=2e-7, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["jnp", "fused"])
+def test_max_iters_zero_means_zero_expansions(built, impl):
+    """max_iters=0 used to be treated as unset (``max_iters or ef``).
+    It must mean ZERO beam expansions: only the entry point (as seen
+    after the greedy descent) can come back."""
+    g, dg, queries, _ = built
+    ids, dists = hnsw.search_graph(dg, queries, k=10, ef=64, max_iters=0,
+                                   beam_impl=impl)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert (ids[:, 1:] == -1).all(), "expansions happened at max_iters=0"
+    assert (ids[:, 0] >= 0).all()
+    assert (dists[:, 0] < 1e38).all()
+    # and max_iters=0 really differs from the default budget
+    full_ids, _ = hnsw.search_graph(dg, queries, k=10, ef=64,
+                                    beam_impl=impl)
+    assert (np.asarray(full_ids) >= 0).all()
+
+
+def test_recall_at_k_matches_set_loop():
+    """Vectorized recall_at_k ≡ the per-row Python set loop, including
+    -1 pads and duplicated ids on either side."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        b, k = int(rng.integers(1, 9)), int(rng.integers(1, 9))
+        found = rng.integers(-1, 12, (b, k))
+        true = rng.integers(-1, 12, (b, k))
+        hits = 0
+        for f_row, t_row in zip(found, true):
+            hits += len({int(x) for x in f_row} & {int(x) for x in t_row})
+        expect = hits / true.size
+        assert hnsw.recall_at_k(found, true) == pytest.approx(expect)
+    assert hnsw.recall_at_k(np.zeros((0, 5)), np.zeros((0, 5))) == 0.0
+
+
+def test_dispatch_counter_fused_one_launch(built):
+    """Launch economics (core/dispatch.py): ONE beam launch per fused
+    search, O(ef) per jnp search."""
+    g, dg, queries, _ = built
+    dispatch.reset("hnsw.beam_launches")
+    hnsw.search_graph(dg, queries, k=10, ef=64, beam_impl="fused")
+    assert dispatch.get("hnsw.beam_launches") == 1
+    dispatch.reset("hnsw.beam_launches")
+    hnsw.search_graph(dg, queries, k=10, ef=64, beam_impl="jnp")
+    assert dispatch.get("hnsw.beam_launches") == 64
+    dispatch.reset("hnsw.beam_launches")
+    hnsw.search_graph(dg, queries, k=10, ef=64, max_iters=5,
+                      beam_impl="jnp")
+    assert dispatch.get("hnsw.beam_launches") == 5
+
+
+def test_beam_impl_validated(built):
+    g, dg, queries, _ = built
+    with pytest.raises(ValueError, match="beam_impl"):
+        hnsw.search_graph(dg, queries, k=10, ef=16, beam_impl="magic")
+    with pytest.raises(ValueError, match="beam_impl"):
+        HNSW(beam_impl="magic")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret mode) vs the jnp oracle
+# ---------------------------------------------------------------------------
+def _random_graph(rng, n, d, m2, dtype=np.float32):
+    vectors = rng.normal(size=(n, d)).astype(np.float32)
+    nbrs = rng.integers(0, n, (n, m2)).astype(np.int32)
+    nbrs[rng.random((n, m2)) < 0.15] = -1          # ragged -1 pads
+    return vectors.astype(dtype), nbrs
+
+
+@pytest.mark.parametrize("ef,t,max_iters,metric", [
+    (8, 1, None, "cosine"),
+    (16, 4, None, "cosine"),
+    (16, 2, 5, "l2"),
+    (8, 4, 0, "cosine"),
+    (16, 3, None, "l2"),               # t does not divide the budget
+])
+def test_kernel_matches_oracle(ef, t, max_iters, metric):
+    rng = np.random.default_rng(ef * 131 + t)
+    n, d, b, m2 = 300, 16, 8, 12
+    vectors, nbrs = _random_graph(rng, n, d, m2)
+    q = rng.normal(size=(b, d)).astype(np.float32)
+    ep = rng.integers(0, n, b).astype(np.int32)
+    ep_dist = np.asarray(ref.gather_distance_ref(
+        jnp.asarray(vectors), jnp.asarray(q), jnp.asarray(ep)[:, None],
+        metric=metric))[:, 0]
+    args = (jnp.asarray(vectors), jnp.asarray(nbrs), jnp.asarray(q),
+            jnp.asarray(ep), jnp.asarray(ep_dist))
+    kw = dict(ef=ef, metric=metric, expand_t=t, max_iters=max_iters)
+    ki, kd = beam_search_pallas(*args, **kw, interpret=True)
+    ri, rd = ref.beam_search_ref(*args, **kw)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=3e-7, atol=1e-6)
+
+
+def test_kernel_int8_scales_matches_oracle():
+    rng = np.random.default_rng(3)
+    n, d, b, m2, ef = 256, 16, 8, 10, 16
+    vectors, nbrs = _random_graph(rng, n, d, m2)
+    enc, scales = get_codec("int8").encode(vectors)
+    q = rng.normal(size=(b, d)).astype(np.float32)
+    ep = rng.integers(0, n, b).astype(np.int32)
+    ep_dist = np.asarray(ref.gather_distance_ref(
+        jnp.asarray(enc), jnp.asarray(q), jnp.asarray(ep)[:, None],
+        metric="cosine", scales=jnp.asarray(scales)))[:, 0]
+    args = (jnp.asarray(enc), jnp.asarray(nbrs), jnp.asarray(q),
+            jnp.asarray(ep), jnp.asarray(ep_dist))
+    kw = dict(ef=ef, metric="cosine", scales=jnp.asarray(scales),
+              expand_t=4)
+    ki, kd = beam_search_pallas(*args, **kw, interpret=True)
+    ri, rd = ref.beam_search_ref(*args, **kw)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=3e-7, atol=1e-6)
+
+
+def test_kernel_block_shrink_odd_batch():
+    """block_q larger than B and a B that needs shrinking both work."""
+    rng = np.random.default_rng(9)
+    n, d, m2, ef = 200, 8, 8, 8
+    vectors, nbrs = _random_graph(rng, n, d, m2)
+    for b in (3, 5):
+        q = rng.normal(size=(b, d)).astype(np.float32)
+        ep = rng.integers(0, n, b).astype(np.int32)
+        ep_dist = np.asarray(ref.gather_distance_ref(
+            jnp.asarray(vectors), jnp.asarray(q),
+            jnp.asarray(ep)[:, None]))[:, 0]
+        args = (jnp.asarray(vectors), jnp.asarray(nbrs), jnp.asarray(q),
+                jnp.asarray(ep), jnp.asarray(ep_dist))
+        ki, kd = beam_search_pallas(*args, ef=ef, expand_t=2,
+                                    interpret=True)
+        ri, rd = ref.beam_search_ref(*args, ef=ef, expand_t=2)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                                   rtol=3e-7, atol=1e-6)
+
+
+def test_beam_merge_sort_equals_bitonic():
+    """The oracle's lax.sort merge and the kernel's bitonic merge are
+    the same function on live entries."""
+    rng = np.random.default_rng(21)
+    b, efp, w, ef = 4, 16, 8, 13
+    bd = np.sort(rng.normal(size=(b, efp)).astype(np.float32), axis=-1)
+    bi = np.argsort(rng.random((b, efp)), axis=-1).astype(np.int32)
+    bx = rng.random((b, efp)) < 0.5
+    # candidate ids disjoint from beam ids (dedup runs before merge)
+    cd = rng.normal(size=(b, w)).astype(np.float32)
+    ci = (rng.permutation(np.arange(100, 100 + w))[None]
+          .repeat(b, 0).astype(np.int32))
+    a = ref.beam_merge(jnp.asarray(bd), jnp.asarray(bi), jnp.asarray(bx),
+                       jnp.asarray(cd), jnp.asarray(ci), ef,
+                       use_bitonic=True)
+    s = ref.beam_merge(jnp.asarray(bd), jnp.asarray(bi), jnp.asarray(bx),
+                       jnp.asarray(cd), jnp.asarray(ci), ef,
+                       use_bitonic=False)
+    for x, y in zip(a, s):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
