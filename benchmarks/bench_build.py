@@ -2,18 +2,36 @@
 ~94 min in Chrome => 5.64 ms/vector. We measure our builders at CPU-feasible
 scale and report ms/vector + the speedup over the browser baseline.
 
+Build rows (DESIGN.md §13): `build_seq_*` is the faithful sequential
+reference; `build_bulk_*` is the device-resident bulk ingest — ONE
+capacity upload, per-batch adjacency-only scatter, batched select/connect
+ops — timed warm (a first pass pays the one-time jit of the batched ops;
+the measured pass reuses it, which is the steady-state an ingest service
+sees); `build_bulk_legacy_*` is the pre-§13 bulk path that re-uploaded
+the full graph every batch, timed after the resident row so the shared
+beam-search compile is warm for it too. The derived columns carry the
+honesty metrics CI asserts on: `h2d_bytes` (host->device traffic from
+the `hnsw.h2d_bytes` counter), `h2d_vs_legacy` (resident / legacy —
+dirty-rows-only should sit well under 1), `beam_launches`
+(`hnsw.beam_launches` delta: one fused launch per batch), `vec_per_s`,
+and `recall10` vs the exact oracle on a held-out query set.
+
 Also: the incremental device-graph sync micro-benchmark (DESIGN.md §3) —
 after a query makes the graph device-resident, an insert must upload only
 its dirty rows, not re-convert all N rows."""
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.core import hnsw_build
+from repro.core import dispatch, hnsw_build
+from repro.core import hnsw as jhnsw
 from repro.data.synthetic import make_corpus
 
 PAPER_MS_PER_VEC = 94 * 60 * 1000 / 1_000_000      # 5.64 ms
+
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
 
 def _synthetic_hnsw_index(n: int, dim: int, M: int, seed: int = 0):
@@ -38,25 +56,81 @@ def _synthetic_hnsw_index(n: int, dim: int, M: int, seed: int = 0):
     return idx
 
 
-def run(rows: list):
-    for n, dim in [(2000, 384), (5000, 64)]:
-        data = make_corpus(n, dim, seed=0)
-        t0 = time.perf_counter()
-        hnsw_build.build_sequential(data, M=5, ef_construction=20)
-        dt = time.perf_counter() - t0
-        ms = dt / n * 1e3
-        rows.append((f"build_seq_n{n}_d{dim}", ms * 1e3,
-                     f"{PAPER_MS_PER_VEC / ms:.1f}x_vs_paper"))
-        t0 = time.perf_counter()
-        hnsw_build.bulk_build(data, M=5, ef_construction=20,
-                              bootstrap=256, batch_size=1024)
-        dt = time.perf_counter() - t0
-        ms = dt / n * 1e3
-        rows.append((f"build_bulk_n{n}_d{dim}", ms * 1e3,
-                     f"{PAPER_MS_PER_VEC / ms:.1f}x_vs_paper"))
+def _recall10(g, q: np.ndarray, true10: np.ndarray) -> float:
+    ids, _ = jhnsw.search_graph(jhnsw.to_device_graph(g), q, k=10, ef=64)
+    return jhnsw.recall_at_k(np.asarray(ids), true10)
 
-    # ---------------- incremental sync vs full re-upload (N=100k) ----------
-    n, dim, M = 100_000, 64, 8
+
+def _true10(data: np.ndarray, q: np.ndarray) -> np.ndarray:
+    vn = hnsw_build.normalize_rows(data)
+    qn = hnsw_build.normalize_rows(q)
+    return np.argsort(1.0 - qn @ vn.T, axis=1, kind="stable")[:, :10]
+
+
+def _bulk_row(rows: list, name: str, data: np.ndarray, q, true10,
+              *, fn, bootstrap: int, batch_size: int, warm: bool,
+              extra: str = "") -> float:
+    """Time one bulk builder over ``data``; returns wall seconds and
+    appends the row. ``warm``: run once un-timed first so the measured
+    pass sees compiled batched ops (steady-state ingest)."""
+    n = len(data)
+    kw = dict(M=5, ef_construction=20, bootstrap=bootstrap,
+              batch_size=batch_size)
+    if warm:
+        fn(data, **kw)
+    dispatch.reset("hnsw.h2d_bytes", "hnsw.beam_launches")
+    t0 = time.perf_counter()
+    g = fn(data, **kw)
+    dt = time.perf_counter() - t0
+    h2d = dispatch.get("hnsw.h2d_bytes")
+    launches = dispatch.get("hnsw.beam_launches")
+    rec = "" if q is None else f" recall10={_recall10(g, q, true10):.3f}"
+    ms = dt / n * 1e3
+    rows.append((name, ms * 1e3,
+                 f"vec_per_s={n / dt:.0f} h2d_bytes={h2d}"
+                 f" beam_launches={launches}"
+                 f" {PAPER_MS_PER_VEC / ms:.1f}x_vs_paper{rec}{extra}"))
+    return dt, h2d
+
+
+def run(rows: list):
+    dim = 64
+    rng = np.random.default_rng(7)
+    sizes = [4000] if SMOKE else [20000, 100000]
+    bootstrap, batch_size = (32, 512) if SMOKE else (256, 1024)
+    for n in sizes:
+        data = make_corpus(n, dim, seed=0)
+        q = rng.normal(size=(200, dim)).astype(np.float32)
+        true10 = _true10(data, q)
+        # sequential reference: full run only at 20k — the paper's 94-min
+        # figure extrapolates from exactly this ms/vector
+        seq_dt = None
+        if n <= 20000:
+            t0 = time.perf_counter()
+            g = hnsw_build.build_sequential(data, M=5, ef_construction=20)
+            seq_dt = time.perf_counter() - t0
+            ms = seq_dt / n * 1e3
+            rows.append((f"build_seq_n{n}_d{dim}", ms * 1e3,
+                         f"vec_per_s={n / seq_dt:.0f}"
+                         f" {PAPER_MS_PER_VEC / ms:.1f}x_vs_paper"
+                         f" recall10={_recall10(g, q, true10):.3f}"))
+        blk_dt, blk_h2d = _bulk_row(
+            rows, f"build_bulk_n{n}_d{dim}", data, q, true10,
+            fn=hnsw_build.bulk_build, bootstrap=bootstrap,
+            batch_size=batch_size, warm=True)
+        leg_dt, leg_h2d = _bulk_row(
+            rows, f"build_bulk_legacy_n{n}_d{dim}", data, q, true10,
+            fn=hnsw_build.bulk_build_legacy, bootstrap=bootstrap,
+            batch_size=batch_size, warm=False)
+        # honesty column on the resident row: amend with the legacy ratio
+        name, us, derived = rows[-2]
+        extra = f" h2d_vs_legacy={blk_h2d / max(leg_h2d, 1):.3f}"
+        if seq_dt is not None:
+            extra += f" speedup_vs_seq={seq_dt / blk_dt:.1f}x"
+        rows[-2] = (name, us, derived + extra)
+
+    # ---------------- incremental sync vs full re-upload -------------------
+    n, M = (20_000 if SMOKE else 100_000), 8
     idx = _synthetic_hnsw_index(n, dim, M)
     rng = np.random.default_rng(1)
     idx.query(rng.normal(size=dim).astype(np.float32), k=1, ef=20)  # resident

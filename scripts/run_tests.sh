@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verify: the one command CI and contributors run.
 #   scripts/run_tests.sh [extra pytest args]
-#   scripts/run_tests.sh --smoke   # tiny bench_query/bench_serve/bench_store
+#   scripts/run_tests.sh --smoke   # tiny bench_build/query/serve/store/...
 #                                  # canary: catches perf-path breakage
 #                                  # (shape regressions, lost batching,
 #                                  # broken save/restore) without a full
@@ -16,7 +16,7 @@ if [[ "${1:-}" == "--smoke" ]]; then
   shift
   out="${SMOKE_JSON:-bench-results/BENCH_smoke.json}"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    exec python -m benchmarks.run --only query,serve,store,shard,memory,tenant,rag \
+    exec python -m benchmarks.run --only build,query,serve,store,shard,memory,tenant,rag \
       --smoke --json "$out" "$@"
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

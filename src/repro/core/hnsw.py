@@ -90,6 +90,13 @@ def to_device_graph(g: HNSWGraph, deleted: np.ndarray | None = None,
     n = g.vectors.shape[0]
     if deleted is None:
         deleted = np.zeros(n, bool)
+    v = g.vectors if enc is None else enc
+    dispatch.bump("hnsw.h2d_bytes",
+                  n * (v.shape[1] * (4 if enc is None else v.itemsize)
+                       + 4 * g.neighbors0.shape[1]
+                       + 4 * g.upper.shape[0] * (g.upper.shape[2]
+                                                 if g.upper.shape[0] else 0)
+                       + 4 + (4 if scales is not None else 0)))
     return DeviceGraph(
         vectors=(jnp.asarray(g.vectors, jnp.float32) if enc is None
                  else jnp.asarray(enc)),
@@ -163,6 +170,13 @@ def apply_row_updates(dg: DeviceGraph, g: HNSWGraph, rows,
                  else np.zeros((0, bucket, 1), np.int32))
         v_new = (jnp.asarray(g.vectors[rp], jnp.float32) if enc is None
                  else jnp.asarray(enc[rp]))
+        dispatch.bump("hnsw.h2d_bytes",
+                      bucket * (g.vectors.shape[1]
+                                * (4 if enc is None else enc.itemsize)
+                                + 4 * g.neighbors0.shape[1]
+                                + 4 * g.upper.shape[0]
+                                * (g.upper.shape[2] if g.upper.shape[0] else 0)
+                                + 4 + (4 if scales is not None else 0)))
         if scales is None:
             vectors, neighbors0, upper, levels = _scatter_rows_jit(
                 dg.vectors, dg.neighbors0, dg.upper, dg.levels,
@@ -190,6 +204,49 @@ def apply_row_updates(dg: DeviceGraph, g: HNSWGraph, rows,
     return dataclasses.replace(
         dg, entry=jnp.asarray(max(int(g.entry), 0), jnp.int32),
         deleted=new_deleted, max_level=int(g.max_level))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_adj_jit(neighbors0, upper, rows, n0_new, u_new):
+    """Donated adjacency-only scatter: bulk ingest's reciprocal connect
+    touches the NEIGHBOR LISTS of up to batch·M existing rows whose
+    vectors are unchanged — shipping full rows there would re-upload
+    O(D) payload bytes per back-edge and erase the dirty-rows-only win
+    (DESIGN.md §13). This path moves only the int32 adjacency."""
+    neighbors0 = neighbors0.at[rows].set(n0_new)
+    if upper.shape[0]:
+        upper = upper.at[:, rows].set(u_new)
+    return neighbors0, upper
+
+
+def apply_adjacency_updates(dg: DeviceGraph, g: HNSWGraph,
+                            rows) -> DeviceGraph:
+    """Scatter only neighbors0/upper for the dirty ``rows`` (vectors,
+    levels, scales untouched) + refresh entry/max_level. Same donation
+    contract as :func:`apply_row_updates`: CONSUMES ``dg``."""
+    if dg.neighbors0.shape != g.neighbors0.shape \
+            or dg.upper.shape != g.upper.shape:
+        raise ValueError("capacity/layer shape changed; full rebuild required")
+    rows = np.asarray(sorted(int(r) for r in rows), np.int32)
+    if rows.size:
+        bucket = 1 << (int(rows.size) - 1).bit_length()
+        pad = np.full(bucket - rows.size, rows[0], np.int32)
+        rp = np.concatenate([rows, pad])
+        u_new = (g.upper[:, rp] if g.upper.shape[0]
+                 else np.zeros((0, bucket, 1), np.int32))
+        dispatch.bump("hnsw.h2d_bytes",
+                      bucket * 4 * (g.neighbors0.shape[1]
+                                    + g.upper.shape[0]
+                                    * (g.upper.shape[2]
+                                       if g.upper.shape[0] else 0)))
+        neighbors0, upper = _scatter_adj_jit(
+            dg.neighbors0, dg.upper, jnp.asarray(rp),
+            jnp.asarray(g.neighbors0[rp], jnp.int32),
+            jnp.asarray(u_new, jnp.int32))
+        dg = dataclasses.replace(dg, neighbors0=neighbors0, upper=upper)
+    return dataclasses.replace(
+        dg, entry=jnp.asarray(max(int(g.entry), 0), jnp.int32),
+        max_level=int(g.max_level))
 
 
 # ---------------------------------------------------------------------------

@@ -290,21 +290,285 @@ def build_sequential(vectors: np.ndarray, *, M: int = 16,
 # ---------------------------------------------------------------------------
 # Bulk builder (TPU adaptation of C3): batched lock-step inserts
 # ---------------------------------------------------------------------------
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def select_heuristic_host(metric: str, vectors: np.ndarray, q: np.ndarray,
+                          cand: list[tuple[float, int]], m: int) -> np.ndarray:
+    """Module-level host oracle for the batched select op (Malkov Alg. 4
+    with keepPrunedConnections backfill) — the loop the vectorized
+    ``kernels.ops.select_neighbors`` is parity-pinned against
+    (tests/test_build.py). Identical to
+    ``SequentialBuilder._select_heuristic`` plus keep-first dedup of
+    candidate ids, which the batched reciprocal connect needs: a batch
+    member can select a destination whose forward list already contains
+    it, so the merged candidate row may repeat an id."""
+    seen: set[int] = set()
+    uniq = []
+    for d_q, e in cand:
+        if e not in seen:
+            seen.add(e)
+            uniq.append((float(d_q), int(e)))
+    uniq.sort()                       # (d, id): ties break on id, as the op
+    selected: list[tuple[float, int]] = []
+    for d_q, e in uniq:
+        if len(selected) >= m:
+            break
+        ev = vectors[e]
+        ok = True
+        for _, s in selected:
+            if _dist(metric, ev, vectors[s][None])[0] < d_q:
+                ok = False
+                break
+        if ok:
+            selected.append((d_q, e))
+    if len(selected) < m:             # keepPrunedConnections backfill
+        chosen = {e for _, e in selected}
+        for d_q, e in uniq:
+            if len(selected) >= m:
+                break
+            if e not in chosen:
+                selected.append((d_q, e))
+    return np.array([e for _, e in selected], np.int32)
+
+
+def _select_batched(dev_vectors, q: np.ndarray, cand: np.ndarray,
+                    *, m: int, metric: str) -> np.ndarray:
+    """Chunked driver for ``ops.select_neighbors``: q [R, D] f32, cand
+    [R, C] i32 -1-pad -> ids [R, m] i32 -1-pad.
+
+    Rows pad to a pow2 chunk and C pads to a pow2 width so the jitted op
+    compiles once per (chunk, C, m) bucket; the chunk bounds the op's
+    [chunk, C, C] pairwise block to ~256 MB however wide the candidate
+    lists get."""
+    from repro.kernels import ops
+
+    r, c = cand.shape
+    if r == 0:
+        return np.zeros((0, m), np.int32)
+    # candidate width stays exact (the [*, C, C] pairwise block is the
+    # op's dominant cost — pow2-padding C would pay up to 4x for air);
+    # the caller keeps C bounded to a small set of values per build
+    cw = max(c, 1)
+    # row bucket: pow2, memory-bounded, floored at 256 so the op compiles
+    # once per (C, m) bucket instead of once per small-group row count
+    chunk = min(max(1 << 26 >> (2 * (cw.bit_length() - 1)), 16), 4096)
+    chunk = min(chunk, max(256, _pow2_ceil(r)))
+    out = np.empty((r, m), np.int32)
+    for s in range(0, r, chunk):
+        e = min(s + chunk, r)
+        qs, cs = q[s:e], cand[s:e]
+        if e - s < chunk:
+            qs = np.concatenate(
+                [qs, np.zeros((chunk - (e - s), q.shape[1]), np.float32)])
+            cs = np.concatenate(
+                [cs, np.full((chunk - (e - s), c), -1, np.int32)])
+        ids, _ = ops.select_neighbors(dev_vectors, qs, cs, m=m, metric=metric)
+        out[s:e] = np.asarray(ids)[: e - s]
+    return out
+
+
+def _connect_reciprocal(b: SequentialBuilder, e_src: np.ndarray,
+                        e_dst: np.ndarray, e_lay: np.ndarray,
+                        dev_vectors=None, impl: str = "op") -> list[int]:
+    """Batched reciprocal connect (DESIGN.md §13): apply one batch's
+    back-edges (src -> dst at layer) by DESTINATION — group the edge list
+    with a host sort-segment pass, then re-select each touched row once
+    from (current adjacency ∪ new sources) with the same Alg. 4
+    heuristic, vectorized over all destinations of a layer.
+
+    Replaces the sequential per-edge append+shrink round-trips: one
+    combined select per (dst, layer) per batch, sources merged in
+    ascending id (= canonical seq) order, so the result is deterministic
+    regardless of how the edge list was produced. ``impl`` selects the
+    vectorized op ("op") or the retained host-loop oracle ("host") —
+    tests pin them bit-for-bit. Returns the touched row ids (the
+    adjacency-dirty set the device sync must scatter)."""
+    dirty: list[int] = []
+    for lc in np.unique(e_lay):
+        sel_m = e_lay == lc
+        ordi = np.lexsort((e_src[sel_m], e_dst[sel_m]))
+        dst = e_dst[sel_m][ordi]
+        src = e_src[sel_m][ordi]
+        udst, starts, cnts = np.unique(dst, return_index=True,
+                                       return_counts=True)
+        gcount = len(udst)
+        gmax = int(cnts.max())
+        cap = b.m_max0 if lc == 0 else b.M
+        adj = (b.neighbors0[udst] if lc == 0
+               else b.upper[lc - 1, udst])                  # [G, cap]
+        srcs = np.full((gcount, _pow2_ceil(gmax)), -1, np.int32)
+        srcs[np.repeat(np.arange(gcount), cnts),
+             np.arange(len(src)) - np.repeat(starts, cnts)] = src
+        cand = np.concatenate([adj, srcs], axis=1)
+        if impl == "op":
+            sel = _select_batched(dev_vectors, b.vectors[udst], cand,
+                                  m=cap, metric=b.metric)
+        else:                                     # host-loop oracle
+            sel = np.full((gcount, cap), -1, np.int32)
+            for gi, e in enumerate(udst):
+                ids = cand[gi][cand[gi] >= 0]
+                ev = b.vectors[int(e)]
+                cd = list(zip(_dist(b.metric, ev, b.vectors[ids]),
+                              [int(c) for c in ids]))
+                keep = select_heuristic_host(b.metric, b.vectors, ev, cd, cap)
+                sel[gi, : len(keep)] = keep
+        if lc == 0:
+            b.neighbors0[udst] = sel
+        else:
+            b.upper[lc - 1, udst] = sel
+        dirty.extend(int(x) for x in udst)
+    return dirty
+
+
 def bulk_build(vectors: np.ndarray, *, M: int = 16, ef_construction: int = 200,
                metric: str = "cosine", seed: int = 0,
                bootstrap: int = 256, batch_size: int = 1024,
-               prenormalized: bool = False) -> HNSWGraph:
-    """Assign levels up-front; bootstrap sequentially; then batch-insert.
+               prenormalized: bool = False, max_level_cap: int = 12,
+               beam_impl: str = "fused",
+               connect_impl: str = "op") -> HNSWGraph:
+    """Device-resident bulk ingest (DESIGN.md §13).
 
-    Each batch: ONE batched JAX beam search against the prefix graph finds
-    every member's efConstruction candidates simultaneously (the lock-step
-    regime of DESIGN.md §2), then edges are connected host-side with mutual-M
-    pruning by distance.
+    Assign levels up front; bootstrap a sequential prefix; then insert
+    the remainder in batches against ONE capacity-padded resident
+    ``DeviceGraph``. Per batch:
+
+      1. one fused beam launch (``beam_impl``) finds every member's
+         ``min(ef_construction, prefix)`` candidates over the prefix —
+         the graph is already resident, so nothing re-uploads;
+      2. a host self-distance block adds each member's intra-batch
+         top-K so batch members can become each other's neighbors;
+      3. forward edges: every (member, layer) row goes through the
+         batched Alg. 4 select op (``kernels.ops.select_neighbors``);
+      4. back edges: :func:`_connect_reciprocal` re-selects each touched
+         destination row once, vectorized per layer;
+      5. only the adjacency of batch ∪ touched rows scatters back
+         (``apply_adjacency_updates``) — per-batch H2D is
+         O(dirty·M) int32, not the O(capacity·D) full re-upload the
+         legacy path (:func:`bulk_build_legacy`) pays.
 
     ``prenormalized``: rows are already in their final stored form (codec
     quantization happens after normalization, DESIGN.md §9) — skip the
-    metric prep.
-    """
+    metric prep. Deterministic for fixed inputs (WAL-replay contract):
+    no data-dependent host iteration order survives the sort-segment
+    grouping."""
+    from repro.core import hnsw as jhnsw   # lazy: keeps numpy path import-light
+
+    if connect_impl not in ("op", "host"):
+        raise ValueError(f"unknown connect_impl {connect_impl!r}")
+    v = (np.ascontiguousarray(vectors, dtype=np.float32) if prenormalized
+         else _prep(vectors, metric))
+    n, d = v.shape
+    rng = np.random.default_rng(seed)
+    mL = 1.0 / np.log(M) if M > 1 else 1.0
+    levels = np.minimum(
+        (-np.log(rng.uniform(1e-12, 1.0, n)) * mL).astype(np.int32),
+        max_level_cap)
+    # bootstrap prefix: highest-level points first so the hierarchy exists
+    # (and the entry point / max_level never move after the bootstrap)
+    order = np.argsort(-levels, kind="stable")
+    v_ord = v[order]
+    lv_ord = levels[order]
+
+    nb = max(min(bootstrap, n), 1)     # >= 1: the beam needs an entry point
+    b = SequentialBuilder(d, M=M, ef_construction=ef_construction,
+                          metric=metric, capacity=n,
+                          max_level_cap=max_level_cap, seed=seed)
+    for i in range(nb):
+        b.insert(v_ord[i], level=int(lv_ord[i]), prenormalized=prenormalized)
+    if b.n >= n:
+        return _permute_graph(b.graph(), order)
+
+    m_max0 = 2 * M
+    lmax_cap = max(int(lv_ord.max(initial=0)), 1)
+    ef_b = max(ef_construction, M + 1)
+
+    # resident graph: ALL vectors/levels go up in the one full upload —
+    # rows beyond the live prefix have no edges, so the beam cannot reach
+    # them, but their payloads are gatherable by id, which is exactly
+    # what the intra-batch select needs. After this, vectors never move
+    # host->device again; batches ship int32 adjacency only.
+    b._grow(n)
+    b.vectors[nb:n] = v_ord[nb:n]
+    b.levels[nb:n] = lv_ord[nb:n]
+    host_g = b.graph_full_capacity(lmax_cap)
+    dg = jhnsw.to_device_graph(host_g)
+
+    while b.n < n:
+        lo = b.n
+        hi = min(lo + batch_size, n)
+        bsz = hi - lo
+        batch = v_ord[lo:hi]
+        # live-prefix candidate cap (the bootstrap-sized cap was a bug:
+        # bootstrap=64, efC=200 built every batch from 64 candidates)
+        k_cand = min(ef_construction, lo)
+        # 1. one beam launch over exactly bsz queries (the zero-padded
+        # tail rows of the old fixed-shape batch are not searched)
+        cand_ids, _ = jhnsw.search_graph(dg, batch, k=k_cand, ef=ef_b,
+                                         beam_impl=beam_impl)
+        cand_ids = np.asarray(cand_ids, np.int32)
+        # 2. intra-batch top-K via one host self-distance block
+        kb = min(bsz - 1, k_cand)
+        if kb > 0:
+            if metric in ("cosine", "ip"):
+                blk = 1.0 - batch @ batch.T
+            else:
+                sq = np.einsum("bd,bd->b", batch, batch)
+                blk = sq[:, None] - 2.0 * (batch @ batch.T) + sq[None, :]
+            np.fill_diagonal(blk, np.inf)
+            # argpartition + sort-the-slice: O(B² + B·kb·log kb), not a
+            # full O(B² log B) row sort for kb « B
+            part = np.argpartition(blk, kb - 1, axis=1)[:, :kb]
+            ordl = np.argsort(np.take_along_axis(blk, part, axis=1),
+                              axis=1, kind="stable")
+            top = np.take_along_axis(part, ordl, axis=1)
+            cand_ids = np.concatenate(
+                [cand_ids, (lo + top).astype(np.int32)], axis=1)
+        # 3. forward edges: one (member, layer) row per live layer,
+        # level-masked candidates, batched select at m=M
+        lvls = lv_ord[lo:hi].astype(np.int64)
+        counts = lvls + 1
+        pj = np.repeat(np.arange(bsz), counts)
+        plc = (np.arange(counts.sum())
+               - np.repeat(np.cumsum(counts) - counts, counts))
+        crows = cand_ids[pj]                                  # [R, C]
+        clev = np.where(crows >= 0, b.levels[np.clip(crows, 0, n - 1)], -1)
+        crows = np.where(clev >= plc[:, None], crows, -1)
+        sel = _select_batched(dg.vectors, batch[pj], crows, m=M,
+                              metric=metric)                  # [R, M]
+        nodes = (lo + pj).astype(np.int32)
+        for lc in np.unique(plc):
+            rm = plc == lc
+            if lc == 0:
+                b.neighbors0[nodes[rm], :M] = sel[rm]   # fresh rows: -1 tail
+            else:
+                b.upper[lc - 1, nodes[rm]] = sel[rm]
+        # 4. reciprocal connect, grouped by destination
+        vm = sel.ravel() >= 0
+        dirty = _connect_reciprocal(
+            b, np.repeat(nodes, M)[vm], sel.ravel()[vm],
+            np.repeat(plc, M)[vm].astype(np.int32),
+            dev_vectors=dg.vectors, impl=connect_impl)
+        b.n = hi
+        # 5. adjacency-only scatter of the dirty rows
+        dg = jhnsw.apply_adjacency_updates(
+            dg, host_g, set(range(lo, hi)) | set(dirty))
+
+    return _permute_graph(b.graph(), order)
+
+
+def bulk_build_legacy(vectors: np.ndarray, *, M: int = 16,
+                      ef_construction: int = 200,
+                      metric: str = "cosine", seed: int = 0,
+                      bootstrap: int = 256, batch_size: int = 1024,
+                      prenormalized: bool = False) -> HNSWGraph:
+    """The pre-§13 bulk builder, retained verbatim as the benchmark
+    baseline (`bench_build`'s `h2d_vs_legacy` honesty column): it
+    re-uploads the full capacity graph EVERY batch (O(N²/batch) H2D)
+    and connects every edge in per-node per-layer host loops. Also keeps
+    the bootstrap-capped ``k_cand`` bug the resident path fixes —
+    this is the measured pre-PR behavior, not a reference semantics."""
     from repro.core import hnsw as jhnsw   # lazy: keeps numpy path import-light
 
     v = (np.ascontiguousarray(vectors, dtype=np.float32) if prenormalized

@@ -236,21 +236,29 @@ class HNSW(VectorIndex):
                 values = self._codec.decode(enc, scales)
                 self._enc = enc
                 self._scales = scales
-            g = build.bulk_build(
-                values, M=self.M, ef_construction=self.ef_construction,
-                metric=self.metric, seed=self.seed,
-                prenormalized=self._codec.lossy)
-            # adopt as mutable builder state so a LATER bulk_insert / insert
-            # appends instead of silently replacing the graph
-            self._builder = build.SequentialBuilder.from_graph(
-                g, ef_construction=self.ef_construction, seed=self.seed)
-            self._keys = list(keys)
-            self._key2id = {k: i for i, k in enumerate(self._keys)}
-            self._device_graph = None
-            self._bump_epoch()
+            self._adopt_bulk_graph(keys, values,
+                                   prenormalized=self._codec.lossy)
             return
         for k, v in zip(keys, values):
             self._insert_impl(k, v)
+
+    def _adopt_bulk_graph(self, keys: list[str], values: np.ndarray,
+                          prenormalized: bool) -> None:
+        """Build a whole graph through the device-resident bulk ingest
+        (DESIGN.md §13) and adopt it as mutable builder state, so a
+        LATER bulk_insert / insert appends instead of silently replacing
+        the graph. ``values`` must already be final stored rows when
+        ``prenormalized`` (codec decode, §9)."""
+        g = build.bulk_build(
+            values, M=self.M, ef_construction=self.ef_construction,
+            metric=self.metric, seed=self.seed,
+            prenormalized=prenormalized, beam_impl=self.beam_impl)
+        self._builder = build.SequentialBuilder.from_graph(
+            g, ef_construction=self.ef_construction, seed=self.seed)
+        self._keys = list(keys)
+        self._key2id = {k: i for i, k in enumerate(self._keys)}
+        self._device_graph = None
+        self._bump_epoch()
 
     bulkInsert = VectorIndex.bulk_insert   # TS-parity alias
 
@@ -853,10 +861,39 @@ class HNSW(VectorIndex):
                      ef_construction=self.ef_construction,
                      ef_search=self.ef_search, seed=self.seed + j,
                      use_bulk_build=False, n_shards=1, dtype=self.dtype,
-                     rerank_factor=self.rerank_factor)
+                     rerank_factor=self.rerank_factor,
+                     beam_impl=self.beam_impl)
                 for j in range(self.n_shards)]
-        for _, key, vec, enc_row, scale in rows:
-            self._insert_canonical(key, vec, enc_row, scale)
+        if (self.use_bulk_build and rows
+                and all(r[3] is None for r in rows)):
+            # bulk adoption fast path (DESIGN.md §13): a reshard is a
+            # from-scratch rebuild over canonical fp32 rows, exactly the
+            # shape the device-resident bulk ingest serves — each target
+            # builder adopts one bulk-built graph instead of replaying
+            # rows through per-row sequential inserts. Lossy codecs keep
+            # the replay path: adopted rows must keep their recorded
+            # encodings, which the builder-level bulk path re-derives.
+            if self.n_shards == 1:
+                self._adopt_bulk_graph([r[1] for r in rows],
+                                       np.stack([r[2] for r in rows]),
+                                       prenormalized=True)
+            else:
+                per: list[list[tuple]] = [[] for _ in range(self.n_shards)]
+                for r in rows:
+                    s = shard_of_key(r[1], self.n_shards)
+                    per[s].append(r)
+                    self._key2shard[r[1]] = s
+                    self._seq[r[1]] = self._next_seq
+                    self._next_seq += 1
+                for s, child_rows in enumerate(per):
+                    if child_rows:
+                        self._shards[s]._adopt_bulk_graph(
+                            [r[1] for r in child_rows],
+                            np.stack([r[2] for r in child_rows]),
+                            prenormalized=True)
+        else:
+            for _, key, vec, enc_row, scale in rows:
+                self._insert_canonical(key, vec, enc_row, scale)
         if self.n_shards > 1:
             if rec_shards == 1:
                 self._seq = {key: seq for seq, key, *_ in rows}

@@ -76,6 +76,31 @@ def beam_search(vectors: jax.Array, neighbors0: jax.Array, q: jax.Array,
                                 expand_t=expand_t, max_iters=max_iters)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "metric"))
+def _select_neighbors_jit(vectors, q, cand_ids, *, m, metric, scales):
+    return _ref.select_neighbors_ref(vectors, q, cand_ids, m=m,
+                                     metric=metric, scales=scales)
+
+
+def select_neighbors(vectors: jax.Array, q: jax.Array, cand_ids: jax.Array,
+                     *, m: int, metric: str = "cosine",
+                     scales: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Batched HNSW neighbor-selection heuristic (Malkov Alg. 4 with
+    pruned-candidate backfill, DESIGN.md §13): vectors [N,D] (any codec
+    dtype, ``scales`` [N] decodes), q [B,D], cand_ids [B,C] i32 -1-pad
+    -> (ids [B,m] i32 -1-pad, dists [B,m] f32 INF-pad), per row
+    output-identical to the host ``select_heuristic_host`` oracle.
+
+    jnp-only: the op is one [B,C,C] einsum + a C-step masked keep-scan,
+    which XLA already fuses well at construction's C = efConstruction
+    sizes — a hand-written Pallas lowering has nothing left to fuse, so
+    every backend runs the reference (unlike the query-path ops above,
+    where the win is cross-hop fusion)."""
+    return _select_neighbors_jit(vectors, q, cand_ids, m=m, metric=metric,
+                                 scales=scales)
+
+
 def flat_topk(db: jax.Array, q: jax.Array, k: int,
               *, metric: str = "cosine",
               scales: jax.Array | None = None

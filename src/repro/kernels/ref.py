@@ -264,6 +264,88 @@ def beam_search_ref(vectors: jax.Array, neighbors0: jax.Array,
     return bi[:, :ef], bd[:, :ef]
 
 
+# ---------------------------------------------------------------------------
+# batched neighbor-selection heuristic (HNSW construction, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def select_neighbors_ref(vectors: jax.Array, q: jax.Array,
+                         cand_ids: jax.Array, *, m: int,
+                         metric: str = "cosine",
+                         scales: jax.Array | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Batched Malkov & Yashunin Alg. 4 (the neighbor-selection heuristic
+    with ``keepPrunedConnections=True``), output-identical per row to the
+    host oracle ``hnsw_build.select_heuristic_host``.
+
+    vectors [N, D] (any codec dtype; ``scales`` [N] decodes), q [B, D]
+    f32, cand_ids [B, C] i32 with -1 padding -> (ids [B, m] i32 -1-pad,
+    dists [B, m] f32 INF-pad, ascending by selection order).
+
+    Per row: candidates sort by the two-key (dist-to-q, id) order (the
+    host sorts (d, e) tuples — ties break on id); a masked keep-scan
+    walks them in that order keeping candidate ``i`` iff no
+    already-kept ``j`` is closer to ``i`` than ``q`` is
+    (``pd[i, j] < d[i]`` rejects); the first ``m`` keeps are the
+    heuristic picks, and pruned/untested candidates backfill in sorted
+    order. The pairwise block ``pd`` is one [B, C, C] einsum — the
+    O(B·C²·D) work the per-node host loops serialized.
+
+    Duplicate ids keep their first occurrence (the reciprocal-connect
+    caller merges an existing adjacency row with new back-edge sources,
+    where an intra-batch source can already be a forward neighbor)."""
+    b, c = cand_ids.shape
+    if c < m:                      # width must cover the output slots
+        cand_ids = jnp.concatenate(
+            [cand_ids, jnp.full((b, m - c), -1, jnp.int32)], axis=1)
+        c = m
+    n = vectors.shape[0]
+    valid = cand_ids >= 0
+    idc = jnp.clip(cand_ids, 0, n - 1)
+    # keep-first dedup (same mask construction as beam_dedup_valid)
+    eq = idc[:, :, None] == idc[:, None, :]
+    earlier = jnp.arange(c)[:, None] > jnp.arange(c)[None, :]
+    dup = jnp.any(eq & earlier[None] & valid[:, None, :], axis=-1)
+    valid = valid & ~dup
+    d = gather_distance_ref(vectors, q, idc, metric=metric, scales=scales)
+    d = jnp.where(valid, d, BEAM_INF)
+    sid = jnp.where(valid, cand_ids, jnp.iinfo(jnp.int32).max)
+    sd, si = jax.lax.sort((d, sid), num_keys=2)          # (d, id) ascending
+    svalid = sd < BEAM_INF
+    # pairwise distances between the sorted candidates, decoded in fp32
+    x = jnp.take(vectors, jnp.clip(si, 0, n - 1), axis=0).astype(jnp.float32)
+    if scales is not None:
+        x = x * jnp.take(scales, jnp.clip(si, 0, n - 1)
+                         ).astype(jnp.float32)[..., None]
+    if metric in ("cosine", "ip"):
+        pd = 1.0 - jnp.einsum("bid,bjd->bij", x, x,
+                              preferred_element_type=jnp.float32)
+    else:
+        sq = jnp.sum(x * x, axis=-1)
+        pd = (sq[:, :, None] - 2.0 * jnp.einsum(
+            "bid,bjd->bij", x, x, preferred_element_type=jnp.float32)
+            + sq[:, None, :])
+
+    def step(i, kept):
+        # candidate i survives iff no already-kept j dominates it:
+        # pd[i, j] < d(i, q) is the host oracle's strict rejection test
+        ok = svalid[:, i] & ~jnp.any(kept & (pd[:, i, :] < sd[:, i, None]),
+                                     axis=-1)
+        return kept.at[:, i].set(ok)
+
+    kept = jax.lax.fori_loop(0, c, step, jnp.zeros((b, c), bool))
+    rank = jnp.cumsum(kept, axis=-1) - kept.astype(jnp.int32)
+    primary = kept & (rank < m)
+    # heuristic picks first (in sorted order), then backfill in sorted
+    # order; invalid slots sorted to the very end by construction
+    pos = jnp.broadcast_to(jnp.arange(c)[None, :], (b, c))
+    key = jnp.where(primary, pos, pos + c)
+    order = jnp.argsort(key, axis=-1)[:, :m]
+    out_i = jnp.take_along_axis(si, order, axis=1)
+    out_d = jnp.take_along_axis(sd, order, axis=1)
+    out_v = jnp.take_along_axis(svalid, order, axis=1)
+    return (jnp.where(out_v, out_i, -1).astype(jnp.int32),
+            jnp.where(out_v, out_d, BEAM_INF))
+
+
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      cur_len: jax.Array) -> jax.Array:
     """q [B,H,Dh]; k,v [B,S,KVH,Dh]; mask pos >= cur_len -> out [B,H,Dh].
